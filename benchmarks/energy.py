@@ -1,0 +1,40 @@
+"""Paper Fig. 6 + §5 headline numbers: energy/op vs #MAC cells (heaters vs
+post-fab trimming), 50×20-bank TOPS / pJ-per-op / TOPS-per-mm²."""
+
+from __future__ import annotations
+
+from repro.core import energy
+
+
+def run():
+    rows = []
+    for trimming in (False, True):
+        cfg = energy.EnergyConfig(trimming=trimming)
+        label = "trimming" if trimming else "heaters"
+        for r in energy.fig6_curve(cfg):
+            rows.append({"variant": label, **r})
+    return rows
+
+
+def headline():
+    heat = energy.EnergyConfig(trimming=False)
+    trim = energy.EnergyConfig(trimming=True)
+    return {
+        "tops_50x20": energy.ops_per_second(50, 20, heat) / 1e12,  # paper: 20
+        "pj_heaters": energy.energy_per_op(50, 20, heat) * 1e12,  # paper: 1.0
+        "pj_trimming": energy.energy_per_op(50, 20, trim) * 1e12,  # paper: 0.28
+        "tops_mm2": energy.compute_density_tops_mm2(50, 20, heat),  # paper: 5.78
+    }
+
+
+def main():
+    h = headline()
+    print("fig6_headline: tops=%.2f pj_heaters=%.3f pj_trimming=%.3f tops_mm2=%.2f"
+          % (h["tops_50x20"], h["pj_heaters"], h["pj_trimming"], h["tops_mm2"]))
+    print("fig6_curve: variant,cells,m,n,e_op_pj")
+    for r in run():
+        print(f"{r['variant']},{r['cells']},{r['m']},{r['n']},{r['e_op_pj']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

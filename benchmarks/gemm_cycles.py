@@ -1,0 +1,38 @@
+"""Paper §3/§5: GeMM-compiler schedules on the photonic weight bank — cycles,
+wall time, energy and effective TOPS of the DFA backward pass for the
+paper's MLP and for the assigned LM architectures' feedback projections."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import energy
+
+
+def run(bank=(50, 20)):
+    cfg = energy.EnergyConfig()
+    m, n = bank
+    rows = []
+    # the paper's MLP: 2 hidden layers of 800, error dim 10
+    r = energy.dfa_backward_cost([800, 800], 10, cfg, bank_m=m, bank_n=n)
+    rows.append({"model": "mnist_mlp(paper)", **r})
+    # LM architectures: per-layer injection dim = d_model, tap dim = d_model
+    for name in ["qwen1.5-0.5b", "granite-8b", "kimi-k2-1t-a32b"]:
+        model = configs.get(name).make_model(jnp.bfloat16)
+        c = model.cfg
+        layers = [c.d_model] * c.n_layers
+        r = energy.dfa_backward_cost(layers, c.d_model, cfg, bank_m=m, bank_n=n)
+        rows.append({"model": name, **r})
+    return rows
+
+
+def main():
+    print("gemm_cycles: model,cycles,seconds,pj_per_mac,tops")
+    for r in run():
+        print(f"{r['model']},{r['cycles']},{r['seconds']:.3e},"
+              f"{r['pj_per_mac']:.3f},{r['tops']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper ref [48] (Launay et al., "Hardware Beyond Backpropagation"):
+competitive DFA training with the error TERNARISED to {-1, 0, +1} — the
+extreme gradient-compression point.  This is also the distributed knob:
+a ternary error broadcast is 16× smaller than bf16.
+
+Compares test accuracy for full-precision / int8 / ternary error under the
+off-chip-BPD photonic noise."""
+
+from __future__ import annotations
+
+from repro.core import dfa, photonics
+from repro.data import mnist, pipeline
+from repro.models.mlp import MLPClassifier
+from repro.train import SGDM, Trainer, TrainerConfig
+
+
+def run(train_n=8192, test_n=2048, steps=512, hidden=(256, 256), seed=0):
+    data = mnist.load((train_n, test_n), seed=seed)
+    xtr, ytr = data["train"]
+    xte, yte = data["test"]
+    rows = []
+    for mode in ("none", "int8", "ternary"):
+        pipe = pipeline.ArrayClassification(xtr, ytr, batch_size=64, seed=seed)
+        model = MLPClassifier(hidden=hidden)
+        tr = Trainer(model, TrainerConfig(
+            algo="dfa",
+            dfa=dfa.DFAConfig(photonics=photonics.preset("offchip_bpd"),
+                              error_compress=mode),
+            optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed, log_every=10**9))
+        state, _ = tr.fit(pipe.batch, total_steps=steps, verbose=False)
+        ev = tr.evaluate(state, pipe.eval_batches(xte, yte, 256))
+        bytes_per_err = {"none": 4.0, "int8": 1.0, "ternary": 0.25}[mode]
+        rows.append({"error_compress": mode,
+                     "test_accuracy": 100 * ev["accuracy"],
+                     "broadcast_bytes_per_element": bytes_per_err})
+    return rows
+
+
+def main():
+    print("ternary_error: mode,test_acc_%,broadcast_B_per_elem")
+    for r in run():
+        print(f"{r['error_compress']},{r['test_accuracy']:.2f},"
+              f"{r['broadcast_bytes_per_element']}")
+
+
+if __name__ == "__main__":
+    main()

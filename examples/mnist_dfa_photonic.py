@@ -1,0 +1,61 @@
+"""The paper's §4 experiment, end to end (Fig. 5b):
+
+train the 784×800×800×10 MLP with DFA where every B(k)·e inner product
+carries the measured analog noise of the three hardware presets, then
+compare test accuracies.
+
+    PYTHONPATH=src python examples/mnist_dfa_photonic.py [--steps 1500]
+
+With real MNIST (REPRO_MNIST_DIR set) and --steps 14000 (~15 epochs) this
+reproduces the paper's 98.10 / 97.41 / 96.33 % ordering; on the default
+procedural-digit corpus the ordering and gap structure are the claim.
+"""
+
+import argparse
+
+from repro.core import dfa, photonics
+from repro.data import mnist, pipeline
+from repro.models.mlp import MLPClassifier
+from repro.train import SGDM, Trainer, TrainerConfig
+
+PAPER = {"ideal": 98.10, "offchip_bpd": 97.41, "onchip_bpd": 96.33}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1024)
+    ap.add_argument("--train-n", type=int, default=16384)
+    ap.add_argument("--test-n", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    data = mnist.load((args.train_n, args.test_n), seed=args.seed)
+    print(f"[data] source={data['source']} train={len(data['train'][0])}")
+    xtr, ytr = data["train"]
+    xte, yte = data["test"]
+
+    results = {}
+    for preset in ["ideal", "offchip_bpd", "onchip_bpd"]:
+        pipe = pipeline.ArrayClassification(xtr, ytr, batch_size=64, seed=args.seed)
+        model = MLPClassifier()  # the paper's exact architecture
+        trainer = Trainer(model, TrainerConfig(
+            algo="dfa",
+            dfa=dfa.DFAConfig(photonics=photonics.preset(preset)),
+            optimizer=SGDM(lr=0.01, momentum=0.9),  # the paper's optimizer
+            seed=args.seed, log_every=max(1, args.steps // 8)))
+        print(f"[train] preset={preset} "
+              f"(sigma={photonics.preset(preset).noise_std}, "
+              f"{photonics.preset(preset).effective_bits:.2f} bits)")
+        state, _ = trainer.fit(pipe.batch, total_steps=args.steps, verbose=True)
+        ev = trainer.evaluate(state, pipe.eval_batches(xte, yte, 256))
+        results[preset] = 100 * ev["accuracy"]
+
+    print("\npreset          test_acc%   paper%(MNIST)")
+    for preset, acc in results.items():
+        print(f"{preset:14s} {acc:8.2f}   {PAPER[preset]:8.2f}")
+    ok = results["ideal"] >= results["offchip_bpd"] - 0.5 >= results["onchip_bpd"] - 1.0
+    print("\nnoise-robustness ordering reproduced:", ok)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Batched serving example: train a small LM briefly with DFA, then serve
+batched requests through the continuous-batching engine and verify the
+model has learned the stream's successor structure.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import jax
+
+from repro.core import dfa
+from repro.data import tokens
+from repro.models.transformer import TransformerConfig, TransformerLM
+from repro.serve import Engine, Request
+from repro.train import SGDM, Trainer, TrainerConfig
+
+VOCAB = 128
+A, B = 31, 7  # the stream's successor rule: next = (A*t + B) mod V
+
+
+def main():
+    model = TransformerLM(TransformerConfig(
+        name="serve-demo", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=512, vocab_size=VOCAB, head_dim=32))
+    gen = tokens.MarkovTokens(VOCAB, seq_len=64, batch_size=16, seed=0,
+                              p_follow=0.95, a=A, b=B)
+    trainer = Trainer(model, TrainerConfig(
+        algo="dfa", dfa=dfa.DFAConfig(),
+        optimizer=SGDM(lr=0.05, momentum=0.9), log_every=50))
+    print("[train] 600 DFA steps on the Markov stream…")
+    state, _ = trainer.fit(gen.batch, total_steps=600)
+
+    eng = Engine(model, state["params"], batch_slots=4, max_len=96)
+    prompts = [[s, (A * s + B) % VOCAB, (A * ((A * s + B) % VOCAB) + B) % VOCAB]
+               for s in (3, 17, 101, 90, 77, 44)]
+    reqs = [Request(prompt=p, max_new=8) for p in prompts]
+    done, ticks = eng.run(reqs)
+    print(f"[serve] {len(done)} requests in {ticks} ticks "
+          f"({len(done)} > slots=4: continuous batching)")
+    correct = total = 0
+    for r in done:
+        t = r.prompt[-1]
+        want = []
+        for _ in range(len(r.out)):
+            t = (A * t + B) % VOCAB
+            want.append(t)
+        hits = sum(int(a == b) for a, b in zip(r.out, want))
+        correct += hits
+        total += len(want)
+        print(f"  prompt={r.prompt} -> {r.out} (chain-follow {hits}/{len(want)})")
+    print(f"[eval] successor-rule follow rate: {correct}/{total} "
+          f"({100*correct/max(total,1):.0f}% — random would be ~0%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Architecture registry plumbing: every assigned arch registers an
+``Arch`` with a full-size model factory (dry-run only — never allocated),
+a reduced smoke-test factory, and its input-spec extras."""
+
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    family: str  # dense | moe | ssm | vlm | hybrid | audio
+    make_model: typing.Callable  # (dtype) -> DFAModel, full public config
+    make_smoke: typing.Callable  # () -> DFAModel, reduced same-family config
+    make_opt: typing.Callable | None = None  # perf-optimised variant (§Perf)
+    sub_quadratic: bool = False  # long_500k runnable?
+    has_decoder: bool = True
+    source: str = ""
+    notes: str = ""
+
+    def input_extras(self, batch: int, kind: str, dtype=jnp.bfloat16) -> dict:
+        """Arch-specific extra inputs (modality-frontend stubs) as
+        ShapeDtypeStructs. kind: train | prefill | decode."""
+        return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524288, 1),
+}
+
+
+def token_specs(batch: int, seq: int) -> dict:
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }

@@ -1,0 +1,60 @@
+"""internvl2-2b [vlm] — 24L d=2048 16H (GQA kv=8) d_ff=8192 vocab=92553,
+InternViT frontend STUBBED (precomputed patch embeds, d_vision=1024).
+[arXiv:2404.16821]"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Arch
+from repro.models.transformer import TransformerConfig, TransformerLM, VisionSettings
+
+N_PATCHES = 256
+D_VISION = 1024
+
+
+def full(dtype=jnp.bfloat16) -> TransformerLM:
+    return TransformerLM(TransformerConfig(
+        name="internvl2-2b", n_layers=24, d_model=2048, n_heads=16,
+        n_kv_heads=8, d_ff=8192, vocab_size=92553, head_dim=128,
+        vision=VisionSettings(d_vision=D_VISION, n_patches=N_PATCHES),
+        rope_theta=1e6, dtype=dtype,
+    ))
+
+
+def smoke() -> TransformerLM:
+    return TransformerLM(TransformerConfig(
+        name="internvl2-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16,
+        vision=VisionSettings(d_vision=32, n_patches=8),
+        dtype=jnp.float32,
+    ))
+
+
+@dataclasses.dataclass(frozen=True)
+class _InternVLArch(Arch):
+    def input_extras(self, batch: int, kind: str, dtype=jnp.bfloat16) -> dict:
+        if kind == "train":
+            return {"patch_embeds": jax.ShapeDtypeStruct((batch, N_PATCHES, D_VISION), dtype)}
+        return {}
+
+
+def opt(dtype=jnp.bfloat16) -> TransformerLM:
+    return TransformerLM(TransformerConfig(
+        name="internvl2-2b", n_layers=24, d_model=2048, n_heads=16,
+        n_kv_heads=8, d_ff=8192, vocab_size=92553, pad_vocab_to=92672,
+        head_dim=128,
+        vision=VisionSettings(d_vision=D_VISION, n_patches=N_PATCHES),
+        rope_theta=1e6, dtype=dtype,
+    ))
+
+
+ARCH = _InternVLArch(
+    name="internvl2-2b", family="vlm", make_model=full, make_smoke=smoke,
+    make_opt=opt,
+    source="arXiv:2404.16821",
+    notes="ViT tower stubbed per assignment; serve paths are text-decode",
+)

@@ -1,0 +1,23 @@
+"""The paper's own architecture: 784×800×800×10 ReLU MLP (Fig. 5),
+error_tap = logits, exact DFA per Eq. 1."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import Arch
+from repro.models.mlp import MLPClassifier
+
+
+def full(dtype=jnp.float32) -> MLPClassifier:
+    return MLPClassifier(in_dim=784, hidden=(800, 800), n_classes=10, dtype=dtype)
+
+
+def smoke() -> MLPClassifier:
+    return MLPClassifier(in_dim=64, hidden=(32, 32), n_classes=10, dtype=jnp.float32)
+
+
+ARCH = Arch(
+    name="mnist_mlp", family="paper", make_model=full, make_smoke=smoke,
+    has_decoder=False, source="paper §4",
+)

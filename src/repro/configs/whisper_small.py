@@ -1,0 +1,58 @@
+"""whisper-small [audio] — 12+12L d=768 12H d_ff=3072 vocab=51865, enc-dec,
+conv frontend STUBBED (precomputed frame embeds).  [arXiv:2212.04356;
+unverified]"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Arch
+from repro.models.whisper import WhisperConfig, WhisperModel
+
+N_FRAMES = 1500
+D_MODEL = 768
+
+
+def full(dtype=jnp.bfloat16) -> WhisperModel:
+    return WhisperModel(WhisperConfig(
+        name="whisper-small", n_enc_layers=12, n_dec_layers=12,
+        d_model=D_MODEL, n_heads=12, d_ff=3072, vocab_size=51865,
+        n_frames=N_FRAMES, dtype=dtype,
+    ))
+
+
+def smoke() -> WhisperModel:
+    return WhisperModel(WhisperConfig(
+        name="whisper-smoke", n_enc_layers=2, n_dec_layers=2,
+        d_model=48, n_heads=4, d_ff=96, vocab_size=128,
+        n_frames=32, max_target=64, dtype=jnp.float32,
+    ))
+
+
+@dataclasses.dataclass(frozen=True)
+class _WhisperArch(Arch):
+    def input_extras(self, batch: int, kind: str, dtype=jnp.bfloat16) -> dict:
+        # precomputed frame embeddings at backbone width (frontend stub)
+        return {"frames": jax.ShapeDtypeStruct((batch, N_FRAMES, D_MODEL), dtype)}
+
+
+def opt(dtype=jnp.bfloat16) -> WhisperModel:
+    """§Perf W1: vocab padded to 51968 (÷16) — the raw 51865 vocab falls
+    back to a model-replicated unembedding whose f32 logits copies dominate
+    the train cell's memory."""
+    return WhisperModel(WhisperConfig(
+        name="whisper-small", n_enc_layers=12, n_dec_layers=12,
+        d_model=D_MODEL, n_heads=12, d_ff=3072, vocab_size=51865,
+        pad_vocab_to=51968, n_frames=N_FRAMES, dtype=dtype,
+    ))
+
+
+ARCH = _WhisperArch(
+    name="whisper-small", family="audio", make_model=full, make_smoke=smoke,
+    make_opt=opt,
+    source="arXiv:2212.04356 (unverified)",
+    notes="enc-dec DFA: encoder gets pooled-error feedback (DESIGN.md §6)",
+)

@@ -1,0 +1,10 @@
+from repro.core import dfa, energy, feedback, photonics
+from repro.core.dfa import DFAConfig, bp_value_and_grad, init_feedback, value_and_grad
+from repro.core.feedback import FeedbackConfig
+from repro.core.photonics import PhotonicConfig, preset
+
+__all__ = [
+    "dfa", "energy", "feedback", "photonics",
+    "DFAConfig", "bp_value_and_grad", "init_feedback", "value_and_grad",
+    "FeedbackConfig", "PhotonicConfig", "preset",
+]

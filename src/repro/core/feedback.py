@@ -1,0 +1,71 @@
+"""Fixed random feedback matrices B(k) for DFA (paper Eq. 1).
+
+B(k) maps the error tap (dim ``d_tap``) to layer k's injection point (dim
+``d_out``).  They are *fixed* — never updated — so they live outside the
+optimizer state.  Options mirror the literature:
+
+* init: gaussian (Nøkland), uniform, orthogonal (rows)
+* shared: one B for all layers of a segment (Launay et al. show this works)
+* ternary: B ∈ {-1,0,+1}·scale — the analog-memory-friendly variant
+  (paper ref [48] ternarises the *error*; ternary B is the weight-bank
+  analogue: MRR weights cycle through 3 levels only)
+
+On the photonic chip B(k) values are inscribed on the MRR weight bank; the
+[-1,1] physical range is handled by `core.photonics` normalisation, so here
+B is stored in natural (unnormalised) units.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import prng
+
+
+@dataclasses.dataclass(frozen=True)
+class FeedbackConfig:
+    init: str = "gaussian"  # gaussian | uniform | orthogonal
+    scale: float | None = None  # None -> 1/sqrt(d_tap)
+    shared: bool = False  # one B shared across a segment's layers
+    ternary: bool = False
+    dtype: jnp.dtype = jnp.float32
+
+
+def _sample(key, shape, cfg: FeedbackConfig):
+    d_tap = shape[-1]
+    # default scale 1/sqrt(d_out): keeps ||B·e|| ≈ ||e|| (delta norms
+    # calibrated like backprop's Wᵀe), which stabilises DFA dynamics.
+    d_out = shape[-2]
+    scale = cfg.scale if cfg.scale is not None else 1.0 / jnp.sqrt(d_out)
+    if cfg.init == "gaussian":
+        b = jax.random.normal(key, shape) * scale
+    elif cfg.init == "uniform":
+        b = jax.random.uniform(key, shape, minval=-scale, maxval=scale) * jnp.sqrt(3.0)
+    elif cfg.init == "orthogonal":
+        b = jax.random.orthogonal(key, max(shape[-2:]), shape=shape[:-2])[
+            ..., : shape[-2], : shape[-1]
+        ] * (scale * jnp.sqrt(d_tap))
+    else:
+        raise ValueError(f"unknown feedback init {cfg.init!r}")
+    if cfg.ternary:
+        thresh = 0.6745 * scale  # median(|N(0,s)|) keeps ~50% sparsity
+        mag = jnp.mean(jnp.abs(b))
+        b = jnp.sign(b) * (jnp.abs(b) > thresh) * mag * 2.0
+    return b.astype(cfg.dtype)
+
+
+def make_feedback(key, n_layers: int, d_out: int, d_tap: int, cfg: FeedbackConfig):
+    """Stacked feedback (n_layers, d_out, d_tap) — or (1, …) if shared."""
+    if cfg.shared:
+        return _sample(prng.fold_name(key, "shared"), (1, d_out, d_tap), cfg)
+    keys = jax.random.split(prng.fold_name(key, "layers"), n_layers)
+    return jax.vmap(lambda k: _sample(k, (d_out, d_tap), cfg))(keys)
+
+
+def feedback_for(stacked, layer_idx):
+    """Select layer's B from stacked feedback (handles shared)."""
+    i = jnp.minimum(layer_idx, stacked.shape[0] - 1)
+    return jax.lax.dynamic_index_in_dim(stacked, i, 0, keepdims=False)

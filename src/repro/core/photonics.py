@@ -1,0 +1,170 @@
+"""Photonic execution model: MRR weight-bank matrix products with the
+paper's measured noise, precision, and tiling semantics.
+
+The physical machine (paper §2–3):
+
+* An M×N MRR weight bank computes M inner products of length N per
+  operational cycle; weights (and the encoded inputs) live in [-1, 1].
+* Larger matrices are subdivided by a GeMM compiler into bank-sized panels
+  processed over multiple cycles (paper §3).
+* Every analog inner product carries Gaussian read noise.  Measured:
+  σ = 0.019 (single MRR multiply), 0.098 (1×4 bank + off-chip BPD),
+  0.202 (on-chip BPD) — in *full-scale output* units where the output
+  range is [-1, 1]  ⇒  effective bits = log2(2/σ).
+
+TPU adaptation (DESIGN.md §2): we do not tile the contraction by the
+physical bank width (20) — that would waste the 128-wide MXU.  Instead the
+Pallas kernel tiles by MXU-aligned blocks and draws noise with variance
+σ²·(block_k / bank_cols), statistically identical to accumulating
+block_k/bank_cols physical bank passes.  The *pure-JAX reference path*
+(this module) draws the total accumulated noise once:
+
+    C = A @ Bᵀ + η,   η ~ N(0, σ² · ceil(K / bank_cols))  (per element)
+
+Noise conventions:
+* "absolute"  — σ is added per bank pass in the operands' natural units;
+  this is the paper's own MNIST-simulation protocol ("adds accurately
+  scaled Gaussian noise ... to the output of each MAC operation").
+* "fullscale" — σ is relative to the bank's full-scale output (N_bank·s_A·s_B
+  for normalised operands): physically conservative; noise grows with
+  operand magnitude.  Both are available; "absolute" is the default because
+  it is what reproduces the paper's Fig. 5 numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PhotonicConfig:
+    bank_rows: int = 50  # M — rows of MRR arrays (paper headline bank 50×20)
+    bank_cols: int = 20  # N — WDM channels per waveguide bus
+    noise_std: float = 0.0  # per-bank-pass Gaussian σ (0 = ideal hardware)
+    noise_convention: str = "absolute"  # absolute | fullscale
+    weight_bits: int | None = None  # fake-quant of inscribed MRR weights
+    input_bits: int | None = None  # fake-quant of modulator amplitudes (DAC)
+    f_s: float = 10e9  # operational rate (Hz), DAC-limited per the paper
+    enabled: bool = True
+
+    @property
+    def effective_bits(self) -> float:
+        if self.noise_std <= 0:
+            return float("inf")
+        return math.log2(2.0 / self.noise_std)
+
+
+# Paper-measured hardware presets (Figs. 3c, 5a).
+PRESETS: dict[str, PhotonicConfig] = {
+    "ideal": PhotonicConfig(noise_std=0.0),
+    "single_mrr": PhotonicConfig(noise_std=0.019),
+    "offchip_bpd": PhotonicConfig(noise_std=0.098),
+    "onchip_bpd": PhotonicConfig(noise_std=0.202),
+    "digital": PhotonicConfig(enabled=False),
+}
+
+
+def preset(name: str) -> PhotonicConfig:
+    return PRESETS[name]
+
+
+def bits_to_std(bits: float) -> float:
+    """Effective resolution (bits) -> full-scale noise σ.  log2(2/σ)=bits."""
+    return 2.0 ** (1.0 - bits)
+
+
+def std_to_bits(std: float) -> float:
+    return math.log2(2.0 / std) if std > 0 else float("inf")
+
+
+def fake_quant(x, bits: int | None, amax=None):
+    """Symmetric fake quantisation to ``bits`` over [-amax, amax]."""
+    if bits is None:
+        return x
+    if amax is None:
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    levels = 2 ** (bits - 1) - 1
+    scaled = jnp.clip(x / amax, -1.0, 1.0) * levels
+    return jnp.round(scaled) / levels * amax
+
+
+def n_bank_passes(k_dim: int, cfg: PhotonicConfig) -> int:
+    """Cycles along the contraction dim (GeMM compiler N-tiling)."""
+    return max(1, math.ceil(k_dim / cfg.bank_cols))
+
+
+def gemm_cycles(m: int, k: int, cfg: PhotonicConfig) -> int:
+    """Total operational cycles for an (m×k)·(k,) matvec on the bank —
+    the GeMM compiler's schedule length (paper §3)."""
+    return max(1, math.ceil(m / cfg.bank_rows)) * n_bank_passes(k, cfg)
+
+
+def noise_sigma_total(k_dim: int, s_a, s_b, cfg: PhotonicConfig):
+    """Std of the accumulated output noise for a length-k inner product,
+    in natural (unnormalised) units."""
+    passes = n_bank_passes(k_dim, cfg)
+    if cfg.noise_convention == "absolute":
+        per_pass = cfg.noise_std * s_a * s_b
+    elif cfg.noise_convention == "fullscale":
+        per_pass = cfg.noise_std * cfg.bank_cols * s_a * s_b
+    else:
+        raise ValueError(cfg.noise_convention)
+    return per_pass * math.sqrt(passes)
+
+
+def photonic_matmul(a, b, cfg: PhotonicConfig, key=None, *, mask=None):
+    """Noisy C = A @ Bᵀ  (the weight-bank product).  Pure-JAX reference path.
+
+    a: (..., T, K) — e.g. the error vectors (amplitude-encoded inputs)
+    b: (M, K)      — the inscribed weight matrix panel (B(k) rows)
+    mask: optional (..., T, M) Hadamard epilogue (the TIA gain g'(a));
+          applied *after* noise, as on-chip (noise enters at the BPD).
+    Returns (..., T, M).
+    """
+    if not cfg.enabled:
+        out = jnp.einsum("...tk,mk->...tm", a, b)
+        return out * mask if mask is not None else out
+
+    from repro.dist.sharding import annotate
+
+    s_a = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(a)), 1e-12))
+    s_b = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(b)), 1e-12))
+    a_n = a / s_a
+    b_n = b / s_b
+    a_n = fake_quant(a_n, cfg.input_bits, 1.0)
+    b_n = fake_quant(b_n, cfg.weight_bits, 1.0)
+    out = jnp.einsum("...tk,mk->...tm", a_n, b_n)
+    if cfg.noise_std > 0.0:
+        if key is None:
+            raise ValueError("noise_std > 0 requires a PRNG key")
+        sigma = noise_sigma_total(a.shape[-1], 1.0, 1.0, cfg)  # normalised units
+        noise = jax.random.normal(key, out.shape, dtype=out.dtype)
+        if out.ndim == 2:
+            noise = annotate(noise, "delta_tm")
+            out = annotate(out, "delta_tm")
+        out = out + sigma * noise
+    out = out * (s_a * s_b)
+    return out * mask if mask is not None else out
+
+
+def photonic_project(e, b, cfg: PhotonicConfig, key=None, *, mask=None, impl="auto"):
+    """DFA projection  δ = e·Bᵀ (⊙ mask)  — dispatches to the Pallas kernel
+    on TPU, the reference path elsewhere.  e: (..., d_tap), b: (d_out, d_tap).
+    """
+    lead = e.shape[:-1]
+    e2 = e.reshape(-1, e.shape[-1])
+    m2 = mask.reshape(-1, mask.shape[-1]) if mask is not None else None
+    use_kernel = impl == "kernel" or (
+        impl == "auto" and jax.default_backend() == "tpu"
+    )
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        out = kops.photonic_matmul(e2, b, cfg, key=key, mask=m2)
+    else:
+        out = photonic_matmul(e2, b, cfg, key=key, mask=m2)
+    return out.reshape(*lead, b.shape[0])

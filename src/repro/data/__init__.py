@@ -1,0 +1,3 @@
+from repro.data import mnist, pipeline, tokens
+
+__all__ = ["mnist", "pipeline", "tokens"]

@@ -1,0 +1,5 @@
+from repro.kernels import ops, ref
+from repro.kernels.dfa_gradient import dfa_gradient_pallas
+from repro.kernels.photonic_matmul import photonic_matmul_pallas
+
+__all__ = ["ops", "ref", "dfa_gradient_pallas", "photonic_matmul_pallas"]

@@ -1,0 +1,33 @@
+"""Production mesh definitions.
+
+A *function*, not a module-level constant — importing this module never
+touches jax device state.  Single pod: 16×16 = 256 chips (v5e pod);
+multi-pod: 2×16×16 = 512 chips with a leading "pod" axis (DCI-connected).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh(n_devices: int | None = None, model_axis: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
+    n = len(devs)
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"), devices=devs[: data * model_axis])

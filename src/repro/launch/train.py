@@ -1,0 +1,96 @@
+"""Training launcher.
+
+Small-scale (this container): runs real steps on the host devices.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mnist_mlp \
+      --steps 500 --preset offchip_bpd --ckpt-dir runs/mlp
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 100 --algo dfa
+
+Production-scale posture: the same step function is what launch/dryrun.py
+lowers against the (pod, data, model) mesh; on a real multi-host cluster
+this entrypoint would be invoked once per host under jax.distributed with
+the dry-run's shardings (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import dfa as dfa_lib
+from repro.core import photonics
+from repro.data import mnist, pipeline, tokens
+from repro.train import SGDM, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (full configs are dry-run-only on CPU)")
+    ap.add_argument("--algo", choices=["dfa", "bp"], default="dfa")
+    ap.add_argument("--preset", choices=list(photonics.PRESETS), default="ideal")
+    ap.add_argument("--error-compress", choices=["none", "ternary", "int8"], default="none")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log", default=None)
+    args = ap.parse_args()
+
+    arch = configs.get(args.arch)
+    model = arch.make_smoke() if (args.smoke or args.arch != "mnist_mlp") else arch.make_model(jnp.float32)
+
+    cfg = TrainerConfig(
+        algo=args.algo,
+        dfa=dfa_lib.DFAConfig(photonics=photonics.preset(args.preset),
+                              error_compress=args.error_compress),
+        optimizer=SGDM(lr=args.lr, momentum=args.momentum),
+        seed=args.seed, ckpt_dir=args.ckpt_dir, log_path=args.log,
+        log_every=max(1, args.steps // 20),
+    )
+    trainer = Trainer(model, cfg)
+
+    if args.arch == "mnist_mlp":
+        data = mnist.load(seed=args.seed)
+        print(f"[data] source={data['source']}")
+        xtr, ytr = data["train"]
+        xte, yte = data["test"]
+        pipe = pipeline.ArrayClassification(xtr, ytr, args.batch, args.seed)
+        state, _ = trainer.fit(pipe.batch, total_steps=args.steps)
+        ev = trainer.evaluate(state, pipe.eval_batches(xte, yte, 256))
+        print(f"[eval] {ev}")
+    else:
+        vocab = model.cfg.vocab_size
+        gen = tokens.MarkovTokens(vocab, args.seq, args.batch, args.seed)
+
+        def batch_fn(step):
+            b = gen.batch(step)
+            if args.arch == "whisper-small":
+                import numpy as np
+
+                rng = np.random.default_rng((args.seed, step, 7))
+                b["frames"] = rng.normal(size=(args.batch, model.cfg.n_frames,
+                                               model.cfg.d_model)).astype("float32") * 0.1
+            if args.arch == "internvl2-2b":
+                import numpy as np
+
+                rng = np.random.default_rng((args.seed, step, 8))
+                v = model.cfg.vision
+                b["patch_embeds"] = rng.normal(size=(args.batch, v.n_patches,
+                                                     v.d_vision)).astype("float32") * 0.1
+            return b
+
+        state, metrics = trainer.fit(batch_fn, total_steps=args.steps)
+        print(f"[final] {({k: float(v) for k, v in metrics.items()})}")
+
+
+if __name__ == "__main__":
+    main()

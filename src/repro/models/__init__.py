@@ -1,0 +1,20 @@
+from repro.models.base import DFAModel, SavedSegment, SegmentSpec, cross_entropy_loss
+from repro.models.mamba import MambaConfig, MambaLM
+from repro.models.mlp import MLPClassifier
+from repro.models.recurrentgemma import RecurrentGemmaConfig, RecurrentGemmaLM
+from repro.models.transformer import (
+    MLASettings,
+    MoESettings,
+    TransformerConfig,
+    TransformerLM,
+    VisionSettings,
+)
+from repro.models.whisper import WhisperConfig, WhisperModel
+
+__all__ = [
+    "DFAModel", "SavedSegment", "SegmentSpec", "cross_entropy_loss",
+    "MambaConfig", "MambaLM", "MLPClassifier",
+    "RecurrentGemmaConfig", "RecurrentGemmaLM",
+    "MLASettings", "MoESettings", "TransformerConfig", "TransformerLM",
+    "VisionSettings", "WhisperConfig", "WhisperModel",
+]

@@ -1,0 +1,161 @@
+"""Mamba-2 language model (mamba2-130m): attention-free SSD blocks.
+
+DFA applicability (DESIGN.md §6): block-granular — each (norm → SSD →
+residual) block is the DFA unit; the intra-block recurrence gets exact
+local vjp.  Decode is O(1) state update, so long_500k lowers serve_step
+with a constant-size cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import annotate, unshard_fsdp
+from repro.models.base import DFAModel, SavedSegment, SegmentSpec, cross_entropy_loss
+from repro.nn.embeddings import Embedding
+from repro.nn.linear import Linear
+from repro.nn.module import Module, named_key, stack_init
+from repro.nn.norms import RMSNorm
+from repro.nn.ssm import Mamba2Block
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    norm_eps: float = 1e-5
+    split_proj: bool = False
+    pad_vocab_to: int | None = None
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def v_padded(self) -> int:
+        return self.pad_vocab_to or self.vocab_size
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaLayer(Module):
+    cfg: MambaConfig
+
+    def _mixer(self):
+        c = self.cfg
+        return Mamba2Block(
+            d_model=c.d_model, d_state=c.d_state, head_dim=c.head_dim,
+            expand=c.expand, conv_width=c.conv_width, chunk=c.chunk,
+            split_proj=c.split_proj, dtype=c.dtype,
+        )
+
+    def init(self, key):
+        c = self.cfg
+        return {
+            "norm": RMSNorm(c.d_model, c.norm_eps, c.dtype).init(named_key(key, "norm")),
+            "mixer": self._mixer().init(named_key(key, "mixer")),
+        }
+
+    def __call__(self, params, x, positions=None):
+        del positions
+        c = self.cfg
+        h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["norm"], x)
+        y = annotate(x + self._mixer()(params["mixer"], h), "act_btd")
+        return y, jnp.float32(0.0)
+
+    def init_cache(self, batch: int, max_len: int = 0, dtype=None):
+        return self._mixer().init_cache(batch, max_len, dtype)
+
+    def decode(self, params, x, cache, cache_len):
+        c = self.cfg
+        h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["norm"], x)
+        y, cache = self._mixer().decode(params["mixer"], h, cache, cache_len)
+        return x + y, cache
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaLM(DFAModel):
+    cfg: MambaConfig
+
+    @property
+    def layer(self) -> MambaLayer:
+        return MambaLayer(self.cfg)
+
+    @property
+    def d_tap(self) -> int:
+        return self.cfg.d_model
+
+    def segment_specs(self):
+        def apply(p, x, extras):
+            del extras
+            return self.layer(p, x)
+
+        return (SegmentSpec("blocks", self.cfg.n_layers, self.cfg.d_model, apply),)
+
+    def init(self, key):
+        c = self.cfg
+        return {
+            "embed": {"tok": Embedding(c.v_padded, c.d_model, c.dtype).init(named_key(key, "tok"))},
+            "blocks": stack_init(self.layer, named_key(key, "blocks"), c.n_layers),
+            "head": {
+                "norm": RMSNorm(c.d_model, c.norm_eps, c.dtype).init(named_key(key, "fnorm")),
+                "out": Linear(c.d_model, c.v_padded, dtype=c.dtype).init(named_key(key, "out")),
+            },
+        }
+
+    def embed(self, params, batch):
+        c = self.cfg
+        return annotate(
+            Embedding(c.v_padded, c.d_model, c.dtype)(params["embed"]["tok"], batch["tokens"]),
+            "act_btd",
+        )
+
+    def run_segments(self, params, x0):
+        def body(x, bp):
+            bp = unshard_fsdp(bp)
+            y, aux = self.layer(bp, x)
+            return y, (x, aux)
+
+        x_final, (inputs, auxes) = jax.lax.scan(body, x0, params["blocks"])
+        inputs = annotate(inputs, "tape_lbsd")
+        return x_final, {"blocks": SavedSegment(inputs=inputs)}, {"blocks": jnp.sum(auxes)}
+
+    def head_logits(self, params, x_final, batch):
+        del batch
+        c = self.cfg
+        h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x_final)
+        logits = h @ params["head"]["out"]["w"]
+        if c.pad_vocab_to:
+            pad_mask = jnp.arange(c.v_padded) >= c.vocab_size
+            logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+        return annotate(logits, "logits")
+
+    def loss_from_logits(self, logits, batch):
+        return cross_entropy_loss(logits, batch["labels"], mask=batch.get("mask"))
+
+    # ---- serving ----------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int = 0, dtype=None):
+        cache = self.layer.init_cache(batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.cfg.n_layers,) + x.shape).copy(), cache
+        )
+
+    def decode_step(self, params, token, caches, cache_len):
+        c = self.cfg
+        x = Embedding(c.v_padded, c.d_model, c.dtype)(params["embed"]["tok"], token)
+
+        def body(x, xs):
+            bp, cache = xs
+            bp = unshard_fsdp(bp)
+            y, new_cache = self.layer.decode(bp, x, cache, cache_len)
+            return y, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+        h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x)
+        return h @ params["head"]["out"]["w"], new_caches

@@ -1,0 +1,94 @@
+"""The paper's feed-forward network: 784×800×800×10 ReLU MLP (Fig. 5).
+
+error_tap = "logits": e = ∂L/∂logits = softmax(ŷ) − y, dim 10 — exactly the
+error the photonic circuit amplitude-encodes onto the N WDM channels.  The
+hidden DenseBlocks receive DFA feedback δ(k) = B(k)e ⊙ g'(a(k)) via the
+engine's block-local vjp; the output linear layer ("head") is updated with
+e exactly, as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import DFAModel, SegmentSpec, cross_entropy_loss
+from repro.nn.linear import DenseBlock, Linear
+from repro.nn.module import named_key
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPClassifier(DFAModel):
+    in_dim: int = 784
+    hidden: tuple = (800, 800)
+    n_classes: int = 10
+    activation: str = "relu"
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def error_tap(self) -> str:
+        return "logits"
+
+    @property
+    def d_tap(self) -> int:
+        return self.n_classes
+
+    def _blocks(self):
+        dims = (self.in_dim,) + tuple(self.hidden)
+        return [
+            DenseBlock(dims[i], dims[i + 1], self.activation, dtype=self.dtype)
+            for i in range(len(self.hidden))
+        ]
+
+    def segment_specs(self):
+        specs = []
+        for i, blk in enumerate(self._blocks()):
+            def apply(p, x, extras, blk=blk):
+                del extras
+                # stacked with L=1 → strip the layer axis handled by engine map
+                return blk(p, x), jnp.float32(0.0)
+
+            specs.append(
+                SegmentSpec(name=f"h{i}", n_layers=1, d_inject=blk.out_dim, apply=apply)
+            )
+        return tuple(specs)
+
+    def init(self, key):
+        params = {"embed": {}}
+        for i, blk in enumerate(self._blocks()):
+            p = blk.init(named_key(key, f"h{i}"))
+            params[f"h{i}"] = jax.tree_util.tree_map(lambda x: x[None], p)
+        params["head"] = Linear(
+            self.hidden[-1], self.n_classes, use_bias=True, dtype=self.dtype
+        ).init(named_key(key, "head"))
+        return params
+
+    def embed(self, params, batch):
+        return batch["x"].astype(self.dtype)
+
+    def run_segments(self, params, x0):
+        x = x0
+        saved = {}
+        for i, blk in enumerate(self._blocks()):
+            name = f"h{i}"
+            saved[name] = _tape(x[None])
+            p = jax.tree_util.tree_map(lambda t: t[0], params[name])
+            x = blk(p, x)
+        return x, saved, {}
+
+    def head_logits(self, params, x_final, batch):
+        del batch
+        return Linear(self.hidden[-1], self.n_classes, use_bias=True, dtype=self.dtype)(
+            params["head"], x_final
+        )
+
+    def loss_from_logits(self, logits, batch):
+        return cross_entropy_loss(logits, batch["y"])
+
+
+def _tape(inputs):
+    from repro.models.base import SavedSegment
+
+    return SavedSegment(inputs=inputs, extras=None)

@@ -1,0 +1,254 @@
+"""RecurrentGemma (Griffin) — hybrid RG-LRU + local attention, 1:2 pattern.
+
+38 layers = 12 × (Rec, Rec, LocalAttn) + (Rec, Rec) tail.  Each layer is a
+Griffin residual layer: (norm → temporal-mix → residual) then (norm →
+gated-MLP → residual).  DFA segments: the three group sub-positions (each a
+stack of 12) plus the 2-layer tail — every layer gets its own feedback
+matrix and local vjp; the RG-LRU recurrence stays inside the block.
+
+long_500k is runnable: local attention caches are ring buffers of
+``window`` (2048) slots and RG-LRU state is O(1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import annotate, unshard_fsdp
+from repro.models.base import DFAModel, SavedSegment, SegmentSpec, cross_entropy_loss
+from repro.nn.attention import Attention
+from repro.nn.embeddings import Embedding
+from repro.nn.linear import GatedMLP, Linear
+from repro.nn.module import Module, named_key, stack_init
+from repro.nn.norms import RMSNorm
+from repro.nn.rglru import RGLRUBlock
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentGemmaConfig:
+    name: str
+    n_layers: int  # total (pattern RRA, remainder = leading R's)
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_rnn: int | None = None  # defaults to d_model
+    window: int = 2048
+    conv_width: int = 4
+    norm_eps: float = 1e-6
+    rope_theta: float = 1e4
+    dtype: jnp.dtype = jnp.float32
+    q_chunk: int = 2048
+    k_chunk: int = 1024
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // 3
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers - 3 * self.n_groups  # leading-R remainder
+
+
+@dataclasses.dataclass(frozen=True)
+class _Layer(Module):
+    cfg: RecurrentGemmaConfig
+    kind: str  # "rec" | "attn"
+
+    def _mixer(self):
+        c = self.cfg
+        if self.kind == "rec":
+            return RGLRUBlock(c.d_model, c.d_rnn or c.d_model, c.conv_width, c.dtype)
+        return Attention(
+            d_model=c.d_model, n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+            window=c.window, rope_theta=c.rope_theta, dtype=c.dtype,
+        )
+
+    def init(self, key):
+        c = self.cfg
+        return {
+            "norm1": RMSNorm(c.d_model, c.norm_eps, c.dtype).init(named_key(key, "norm1")),
+            "mixer": self._mixer().init(named_key(key, "mixer")),
+            "norm2": RMSNorm(c.d_model, c.norm_eps, c.dtype).init(named_key(key, "norm2")),
+            "mlp": GatedMLP(c.d_model, c.d_ff, "gelu", c.dtype).init(named_key(key, "mlp")),
+        }
+
+    def __call__(self, params, x, positions):
+        c = self.cfg
+        norm = RMSNorm(c.d_model, c.norm_eps, c.dtype)
+        h = norm(params["norm1"], x)
+        if self.kind == "rec":
+            h = self._mixer()(params["mixer"], h)
+        else:
+            h = self._mixer()(params["mixer"], h, positions=positions,
+                              q_chunk=c.q_chunk, k_chunk=c.k_chunk)
+        x = x + h
+        h = norm(params["norm2"], x)
+        h = GatedMLP(c.d_model, c.d_ff, "gelu", c.dtype)(params["mlp"], h)
+        return annotate(x + h, "act_btd"), jnp.float32(0.0)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        if self.kind == "rec":
+            return self._mixer().init_cache(batch, 0, dtype)
+        return self._mixer().init_cache(batch, max_len, dtype)
+
+    def decode(self, params, x, cache, cache_len):
+        c = self.cfg
+        norm = RMSNorm(c.d_model, c.norm_eps, c.dtype)
+        h = norm(params["norm1"], x)
+        h, cache = self._mixer().decode(params["mixer"], h, cache, cache_len)
+        x = x + h
+        h = norm(params["norm2"], x)
+        h = GatedMLP(c.d_model, c.d_ff, "gelu", c.dtype)(params["mlp"], h)
+        return x + h, cache
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentGemmaLM(DFAModel):
+    cfg: RecurrentGemmaConfig
+
+    @property
+    def d_tap(self) -> int:
+        return self.cfg.d_model
+
+    def _rec(self):
+        return _Layer(self.cfg, "rec")
+
+    def _attn(self):
+        return _Layer(self.cfg, "attn")
+
+    def segment_specs(self):
+        c = self.cfg
+
+        def mk(layer):
+            def apply(p, x, extras, layer=layer):
+                return layer(p, x, extras)
+
+            return apply
+
+        specs = [
+            SegmentSpec("grp_rec1", c.n_groups, c.d_model, mk(self._rec())),
+            SegmentSpec("grp_rec2", c.n_groups, c.d_model, mk(self._rec())),
+            SegmentSpec("grp_attn", c.n_groups, c.d_model, mk(self._attn())),
+        ]
+        if c.n_tail:
+            specs.append(SegmentSpec("tail_rec", c.n_tail, c.d_model, mk(self._rec())))
+        return tuple(specs)
+
+    def init(self, key):
+        c = self.cfg
+        params = {
+            "embed": {"tok": Embedding(c.vocab_size, c.d_model, c.dtype).init(named_key(key, "tok"))},
+            "grp_rec1": stack_init(self._rec(), named_key(key, "grp_rec1"), c.n_groups),
+            "grp_rec2": stack_init(self._rec(), named_key(key, "grp_rec2"), c.n_groups),
+            "grp_attn": stack_init(self._attn(), named_key(key, "grp_attn"), c.n_groups),
+            "head": {
+                "norm": RMSNorm(c.d_model, c.norm_eps, c.dtype).init(named_key(key, "fnorm")),
+                "out": Linear(c.d_model, c.vocab_size, dtype=c.dtype).init(named_key(key, "out")),
+            },
+        }
+        if c.n_tail:
+            params["tail_rec"] = stack_init(self._rec(), named_key(key, "tail_rec"), c.n_tail)
+        return params
+
+    def embed(self, params, batch):
+        c = self.cfg
+        return annotate(
+            Embedding(c.vocab_size, c.d_model, c.dtype)(params["embed"]["tok"], batch["tokens"]),
+            "act_btd",
+        )
+
+    def run_segments(self, params, x0):
+        c = self.cfg
+        b, s, _ = x0.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        rec, att = self._rec(), self._attn()
+
+        def body(x, xs):
+            p1, p2, p3 = (unshard_fsdp(q) for q in xs)
+            x1 = x
+            x, _ = rec(p1, x, positions)
+            x2 = x
+            x, _ = rec(p2, x, positions)
+            x3 = x
+            x, _ = att(p3, x, positions)
+            return x, (x1, x2, x3)
+
+        x, (i1, i2, i3) = jax.lax.scan(
+            body, x0, (params["grp_rec1"], params["grp_rec2"], params["grp_attn"])
+        )
+        saved = {
+            "grp_rec1": SavedSegment(inputs=annotate(i1, "tape_lbsd"), extras=positions),
+            "grp_rec2": SavedSegment(inputs=annotate(i2, "tape_lbsd"), extras=positions),
+            "grp_attn": SavedSegment(inputs=annotate(i3, "tape_lbsd"), extras=positions),
+        }
+        if c.n_tail:
+            def tail_body(x, bp):
+                bp = unshard_fsdp(bp)
+                y, _ = rec(bp, x, positions)
+                return y, x
+
+            x, tin = jax.lax.scan(tail_body, x, params["tail_rec"])
+            saved["tail_rec"] = SavedSegment(inputs=annotate(tin, "tape_lbsd"), extras=positions)
+        return x, saved, {}
+
+    def head_logits(self, params, x_final, batch):
+        del batch
+        c = self.cfg
+        h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x_final)
+        return annotate(h @ params["head"]["out"]["w"], "logits")
+
+    def loss_from_logits(self, logits, batch):
+        return cross_entropy_loss(logits, batch["labels"], mask=batch.get("mask"))
+
+    # ---- serving ----------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int, dtype=None):
+        c = self.cfg
+        rec_cache = self._rec().init_cache(batch, 0, dtype)
+        attn_cache = self._attn().init_cache(batch, max_len, dtype)
+        stack = lambda cache, n: jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), cache
+        )
+        caches = {
+            "grp_rec1": stack(rec_cache, c.n_groups),
+            "grp_rec2": stack(rec_cache, c.n_groups),
+            "grp_attn": stack(attn_cache, c.n_groups),
+        }
+        if c.n_tail:
+            caches["tail_rec"] = stack(rec_cache, c.n_tail)
+        return caches
+
+    def decode_step(self, params, token, caches, cache_len):
+        c = self.cfg
+        x = Embedding(c.vocab_size, c.d_model, c.dtype)(params["embed"]["tok"], token)
+        rec, att = self._rec(), self._attn()
+
+        def body(x, xs):
+            (p1, c1), (p2, c2), (p3, c3) = xs
+            p1, p2, p3 = unshard_fsdp(p1), unshard_fsdp(p2), unshard_fsdp(p3)
+            x, n1 = rec.decode(p1, x, c1, cache_len)
+            x, n2 = rec.decode(p2, x, c2, cache_len)
+            x, n3 = att.decode(p3, x, c3, cache_len)
+            return x, (n1, n2, n3)
+
+        x, (n1, n2, n3) = jax.lax.scan(
+            body, x,
+            ((params["grp_rec1"], caches["grp_rec1"]),
+             (params["grp_rec2"], caches["grp_rec2"]),
+             (params["grp_attn"], caches["grp_attn"])),
+        )
+        new_caches = {"grp_rec1": n1, "grp_rec2": n2, "grp_attn": n3}
+        if c.n_tail:
+            def tail_body(x, xs):
+                bp, cc = xs
+                y, nc = rec.decode(bp, x, cc, cache_len)
+                return y, nc
+
+            x, nt = jax.lax.scan(tail_body, x, (params["tail_rec"], caches["tail_rec"]))
+            new_caches["tail_rec"] = nt
+        h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x)
+        return h @ params["head"]["out"]["w"], new_caches

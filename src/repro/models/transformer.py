@@ -1,0 +1,270 @@
+"""Decoder-only transformer LM — the workhorse for 7 of the 10 assigned
+architectures (qwen1.5 / qwen3 / granite / minicpm3-MLA / qwen2-moe /
+kimi-k2 / internvl2 backbone).
+
+Composable switches: GQA or MLA temporal mix, dense or MoE channel mix,
+qkv-bias, qk-norm, sliding window, optional vision-stub prefix.  Layers are
+scanned (stacked params) — HLO depth-independent; DFA sees one segment
+named "blocks".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import annotate, unshard_fsdp
+from repro.models.base import DFAModel, SavedSegment, SegmentSpec, cross_entropy_loss
+from repro.nn.attention import Attention, MLAttention
+from repro.nn.embeddings import Embedding
+from repro.nn.frontends import VisionFrontendStub
+from repro.nn.linear import GatedMLP, Linear
+from repro.nn.module import Module, named_key, stack_init
+from repro.nn.moe import MoE
+from repro.nn.norms import RMSNorm
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    d_ff_shared: int | None = None
+    capacity_factor: float = 1.25
+    lb_weight: float = 0.01
+    z_weight: float = 1e-3
+    dispatch: str = "einsum"  # einsum | gather (see nn/moe.py)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASettings:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionSettings:
+    d_vision: int = 1024
+    n_patches: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    window: int | None = None
+    moe: MoESettings | None = None
+    mla: MLASettings | None = None
+    vision: VisionSettings | None = None
+    dtype: jnp.dtype = jnp.float32
+    # attention chunking for long-sequence prefill
+    q_chunk: int = 2048
+    k_chunk: int = 1024
+    # pad the embedding/unembedding vocab dim to a shard/MXU-aligned size;
+    # odd vocabularies (e.g. 50280, 73448) otherwise fall back to unsharded
+    # unembeddings whose logits all-reduce dominates the collective term
+    pad_vocab_to: int | None = None
+
+    @property
+    def v_padded(self) -> int:
+        return self.pad_vocab_to or self.vocab_size
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderBlock(Module):
+    cfg: TransformerConfig
+
+    def _attn(self):
+        c = self.cfg
+        if c.mla is not None:
+            m = c.mla
+            return MLAttention(
+                d_model=c.d_model, n_heads=c.n_heads,
+                q_lora_rank=m.q_lora_rank, kv_lora_rank=m.kv_lora_rank,
+                qk_nope_dim=m.qk_nope_dim, qk_rope_dim=m.qk_rope_dim,
+                v_head_dim=m.v_head_dim, rope_theta=c.rope_theta, dtype=c.dtype,
+            )
+        return Attention(
+            d_model=c.d_model, n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+            head_dim=c.head_dim, qkv_bias=c.qkv_bias, qk_norm=c.qk_norm,
+            rope_theta=c.rope_theta, window=c.window, dtype=c.dtype,
+        )
+
+    def _ffn(self):
+        c = self.cfg
+        if c.moe is not None:
+            m = c.moe
+            return MoE(
+                d_model=c.d_model, d_ff_expert=m.d_ff_expert,
+                n_experts=m.n_experts, top_k=m.top_k,
+                n_shared_experts=m.n_shared_experts, d_ff_shared=m.d_ff_shared,
+                capacity_factor=m.capacity_factor, dispatch=m.dispatch,
+                dtype=c.dtype,
+            )
+        return GatedMLP(c.d_model, c.d_ff, dtype=c.dtype)
+
+    def init(self, key):
+        c = self.cfg
+        return {
+            "norm1": RMSNorm(c.d_model, c.norm_eps, c.dtype).init(named_key(key, "norm1")),
+            "attn": self._attn().init(named_key(key, "attn")),
+            "norm2": RMSNorm(c.d_model, c.norm_eps, c.dtype).init(named_key(key, "norm2")),
+            "ffn": self._ffn().init(named_key(key, "ffn")),
+        }
+
+    def __call__(self, params, x, positions):
+        """-> (y, weighted_aux_loss)."""
+        c = self.cfg
+        norm = RMSNorm(c.d_model, c.norm_eps, c.dtype)
+        h = norm(params["norm1"], x)
+        h = self._attn()(params["attn"], h, positions=positions,
+                         q_chunk=c.q_chunk, k_chunk=c.k_chunk)
+        x = x + h
+        h = norm(params["norm2"], x)
+        if c.moe is not None:
+            h, aux = self._ffn()(params["ffn"], h)
+            aux_loss = c.moe.lb_weight * aux["lb_loss"] + c.moe.z_weight * aux["z_loss"]
+        else:
+            h = self._ffn()(params["ffn"], h)
+            aux_loss = jnp.float32(0.0)
+        y = annotate(x + h, "act_btd")
+        return y, aux_loss
+
+    # --- serving ---
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        return self._attn().init_cache(batch, max_len, dtype)
+
+    def decode(self, params, x, cache, cache_len):
+        c = self.cfg
+        norm = RMSNorm(c.d_model, c.norm_eps, c.dtype)
+        h = norm(params["norm1"], x)
+        h, cache = self._attn().decode(params["attn"], h, cache, cache_len)
+        x = x + h
+        h = norm(params["norm2"], x)
+        if c.moe is not None:
+            h, _ = self._ffn()(params["ffn"], h)
+        else:
+            h = self._ffn()(params["ffn"], h)
+        return x + h, cache
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM(DFAModel):
+    cfg: TransformerConfig
+
+    @property
+    def block(self) -> DecoderBlock:
+        return DecoderBlock(self.cfg)
+
+    @property
+    def d_tap(self) -> int:
+        return self.cfg.d_model  # "hidden" tap (DESIGN.md §8.3)
+
+    def segment_specs(self):
+        c = self.cfg
+
+        def apply(p, x, extras):
+            positions = extras
+            return self.block(p, x, positions)
+
+        return (
+            SegmentSpec("blocks", c.n_layers, c.d_model, apply),
+        )
+
+    def init(self, key):
+        c = self.cfg
+        embed = {"tok": Embedding(c.v_padded, c.d_model, c.dtype).init(named_key(key, "tok"))}
+        if c.vision is not None:
+            embed["vision"] = VisionFrontendStub(c.vision.d_vision, c.d_model, c.dtype).init(
+                named_key(key, "vision")
+            )
+        return {
+            "embed": embed,
+            "blocks": stack_init(self.block, named_key(key, "blocks"), c.n_layers),
+            "head": {
+                "norm": RMSNorm(c.d_model, c.norm_eps, c.dtype).init(named_key(key, "fnorm")),
+                "out": Linear(c.d_model, c.v_padded, dtype=c.dtype).init(named_key(key, "out")),
+            },
+        }
+
+    def embed(self, params, batch):
+        c = self.cfg
+        tok = Embedding(c.v_padded, c.d_model, c.dtype)(params["embed"]["tok"], batch["tokens"])
+        if c.vision is not None and "patch_embeds" in batch:
+            # vision prefix is optional: text-only prefill/serving is valid
+            pre = VisionFrontendStub(c.vision.d_vision, c.d_model, c.dtype)(
+                params["embed"]["vision"], batch["patch_embeds"]
+            )
+            tok = jnp.concatenate([pre.astype(tok.dtype), tok], axis=1)
+        return annotate(tok, "act_btd")
+
+    def run_segments(self, params, x0):
+        b, s, _ = x0.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+        def body(x, bp):
+            bp = unshard_fsdp(bp)  # per-layer ZeRO-3 gather inside the scan
+            y, aux = self.block(bp, x, positions)
+            return y, (x, aux)
+
+        x_final, (inputs, auxes) = jax.lax.scan(body, x0, params["blocks"])
+        inputs = annotate(inputs, "tape_lbsd")  # model-sharded DFA tape
+        saved = {"blocks": SavedSegment(inputs=inputs, extras=positions)}
+        return x_final, saved, {"blocks": jnp.sum(auxes)}
+
+    def head_logits(self, params, x_final, batch):
+        del batch
+        c = self.cfg
+        h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x_final)
+        logits = h @ params["head"]["out"]["w"]
+        if c.pad_vocab_to:
+            pad_mask = jnp.arange(c.v_padded) >= c.vocab_size
+            logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+        return annotate(logits, "logits")
+
+    def loss_from_logits(self, logits, batch):
+        c = self.cfg
+        if c.vision is not None:
+            # loss only over the text region (after n_patches prefix)
+            logits = logits[:, -batch["labels"].shape[1]:]
+        mask = batch.get("mask")
+        return cross_entropy_loss(logits, batch["labels"], mask=mask)
+
+    # ---- serving ----------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int, dtype=None):
+        """Stacked per-layer caches (L leading axis)."""
+        cache = self.block.init_cache(batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.cfg.n_layers,) + x.shape).copy(), cache
+        )
+
+    def decode_step(self, params, token, caches, cache_len):
+        """token: (B, 1) int. Returns (logits (B,1,V), new caches)."""
+        c = self.cfg
+        x = Embedding(c.v_padded, c.d_model, c.dtype)(params["embed"]["tok"], token)
+
+        def body(x, xs):
+            bp, cache = xs
+            bp = unshard_fsdp(bp)
+            y, new_cache = self.block.decode(bp, x, cache, cache_len)
+            return y, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+        h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x)
+        return h @ params["head"]["out"]["w"], new_caches

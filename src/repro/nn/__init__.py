@@ -1,0 +1,21 @@
+from repro.nn import activations, initializers
+from repro.nn.attention import Attention, CrossAttention, MLAttention
+from repro.nn.embeddings import Embedding, apply_rotary, rotary_angles
+from repro.nn.frontends import AudioFrontendStub, VisionFrontendStub
+from repro.nn.linear import DenseBlock, GatedMLP, Linear, MLP
+from repro.nn.module import Module, Params, layer_slice, named_key, stack_init
+from repro.nn.moe import MoE
+from repro.nn.norms import LayerNorm, RMSNorm, rms_normalize
+from repro.nn.rglru import RGLRUBlock
+from repro.nn.ssm import Mamba2Block
+
+__all__ = [
+    "activations", "initializers",
+    "Attention", "CrossAttention", "MLAttention",
+    "Embedding", "apply_rotary", "rotary_angles",
+    "AudioFrontendStub", "VisionFrontendStub",
+    "DenseBlock", "GatedMLP", "Linear", "MLP",
+    "Module", "Params", "layer_slice", "named_key", "stack_init",
+    "MoE", "LayerNorm", "RMSNorm", "rms_normalize",
+    "RGLRUBlock", "Mamba2Block",
+]

@@ -1,0 +1,62 @@
+"""Token embeddings, unembedding, and rotary position embeddings."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers
+from repro.nn.module import Module
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding(Module):
+    vocab_size: int
+    dim: int
+    dtype: jnp.dtype = jnp.float32
+    init_std: float = 0.02
+
+    def init(self, key):
+        return {
+            "table": initializers.normal(self.init_std)(
+                key, (self.vocab_size, self.dim), self.dtype
+            )
+        }
+
+    def __call__(self, params, token_ids):
+        return jnp.take(params["table"], token_ids, axis=0)
+
+    def attend(self, params, x):
+        """Unembed (tied weights): x @ tableᵀ -> logits."""
+        return x @ params["table"].T
+
+
+def rotary_angles(positions, head_dim: int, theta: float = 10000.0):
+    """Return (cos, sin) of shape positions.shape + (head_dim//2,)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2).
+
+    Rotates pairs (x[..., :half], x[..., half:]) — the "half-split" (GPT-NeoX /
+    llama) convention used by every assigned LM arch.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over the heads axis
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    rot1 = x1 * c - x2 * s
+    rot2 = x2 * c + x1 * s
+    return jnp.concatenate([rot1, rot2], axis=-1).astype(x.dtype)
+
+
+def positions_from_offset(batch: int, seq: int, offset):
+    """(batch, seq) absolute positions starting at ``offset`` (decode step)."""
+    return jnp.arange(seq)[None, :] + jnp.asarray(offset).reshape(-1, 1)

@@ -1,0 +1,61 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[audio]`` (whisper) and ``[vlm]`` (internvl) cells specify the transformer
+backbone only; ``input_specs()`` supplies *precomputed* frame / patch
+embeddings already at backbone width.  The stubs below add the minimal
+learned glue (positional embedding + layernorm for audio frames; a projection
+for vision patches) so smoke tests exercise a real parameter path, but no
+conv/ViT tower is built (documented in DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.nn import initializers
+from repro.nn.linear import Linear
+from repro.nn.module import Module, named_key
+from repro.nn.norms import LayerNorm
+
+
+@dataclasses.dataclass(frozen=True)
+class AudioFrontendStub(Module):
+    """Whisper conv frontend replaced by: precomputed frames (B, T, d) →
+    + learned positional embedding → layernorm."""
+
+    d_model: int
+    max_frames: int = 1500
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        return {
+            "pos": initializers.normal(0.01)(named_key(key, "pos"), (self.max_frames, self.d_model), self.dtype),
+            "ln": LayerNorm(self.d_model, dtype=self.dtype).init(named_key(key, "ln")),
+        }
+
+    def __call__(self, params, frames):
+        t = frames.shape[1]
+        x = frames + params["pos"][:t]
+        return LayerNorm(self.d_model, dtype=self.dtype)(params["ln"], x)
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionFrontendStub(Module):
+    """InternViT replaced by: precomputed patch embeds (B, P, d_vis) →
+    linear projection to LM width (the mlp1 connector in InternVL)."""
+
+    d_vision: int
+    d_model: int
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        return {
+            "proj": Linear(self.d_vision, self.d_model, use_bias=True, dtype=self.dtype).init(named_key(key, "proj")),
+            "ln": LayerNorm(self.d_vision, dtype=self.dtype).init(named_key(key, "ln")),
+        }
+
+    def __call__(self, params, patches):
+        x = LayerNorm(self.d_vision, dtype=self.dtype)(params["ln"], patches)
+        return x @ params["proj"]["w"] + params["proj"]["b"]

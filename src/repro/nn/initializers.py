@@ -1,0 +1,52 @@
+"""Parameter initializers (pure functions of (key, shape, dtype))."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal(stddev: float = 0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+    return init
+
+
+def lecun_normal(in_axis: int = -2):
+    """Variance-scaling (fan_in) — the default for projection weights."""
+
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+        std = 1.0 / np.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+
+    return init
+
+
+def glorot_normal():
+    def init(key, shape, dtype=jnp.float32):
+        fan_in, fan_out = shape[-2], shape[-1]
+        std = np.sqrt(2.0 / (fan_in + fan_out))
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+
+    return init
+
+
+def uniform_sym(scale: float):
+    def init(key, shape, dtype=jnp.float32):
+        return jax.random.uniform(key, shape, minval=-scale, maxval=scale).astype(dtype)
+
+    return init

@@ -1,0 +1,112 @@
+"""Linear / MLP layers."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import activations, initializers
+from repro.nn.module import Module, named_key
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear(Module):
+    in_dim: int
+    out_dim: int
+    use_bias: bool = False
+    dtype: jnp.dtype = jnp.float32
+    init_std: float | None = None  # None -> fan_in scaling
+
+    def init(self, key):
+        if self.init_std is None:
+            w = initializers.lecun_normal()(named_key(key, "w"), (self.in_dim, self.out_dim), self.dtype)
+        else:
+            w = initializers.normal(self.init_std)(named_key(key, "w"), (self.in_dim, self.out_dim), self.dtype)
+        p = {"w": w}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.out_dim,), self.dtype)
+        return p
+
+    def __call__(self, params, x):
+        y = x @ params["w"]
+        if self.use_bias:
+            y = y + params["b"]
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseBlock(Module):
+    """linear -> activation, the paper's hidden-layer unit.
+
+    Block-granular DFA applied to this block reproduces the paper's exact
+    DFA update: injecting delta = B e at the block *output* and local-vjp'ing
+    yields  grad_W = (B e ⊙ g'(a)) h_inᵀ  — Eq. 1 verbatim — because the
+    local vjp through g contributes the ⊙ g'(a) Hadamard.
+    """
+
+    in_dim: int
+    out_dim: int
+    activation: str = "relu"
+    use_bias: bool = True
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        lin = Linear(self.in_dim, self.out_dim, self.use_bias, self.dtype)
+        return lin.init(key)
+
+    def preact(self, params, x):
+        return Linear(self.in_dim, self.out_dim, self.use_bias, self.dtype)(params, x)
+
+    def __call__(self, params, x):
+        g, _ = activations.get(self.activation)
+        return g(self.preact(params, x))
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedMLP(Module):
+    """SwiGLU-style gated FFN: down( act(gate(x)) * up(x) ).
+
+    Used by every assigned LM (llama/qwen/granite/minicpm lineage).
+    """
+
+    d_model: int
+    d_ff: int
+    activation: str = "silu"
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        return {
+            "gate": Linear(self.d_model, self.d_ff, dtype=self.dtype).init(named_key(key, "gate")),
+            "up": Linear(self.d_model, self.d_ff, dtype=self.dtype).init(named_key(key, "up")),
+            "down": Linear(self.d_ff, self.d_model, dtype=self.dtype).init(named_key(key, "down")),
+        }
+
+    def __call__(self, params, x):
+        g, _ = activations.get(self.activation)
+        gate = g(x @ params["gate"]["w"])
+        up = x @ params["up"]["w"]
+        return (gate * up) @ params["down"]["w"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP(Module):
+    """Plain 2-layer MLP (whisper-style FFN)."""
+
+    d_model: int
+    d_ff: int
+    activation: str = "gelu"
+    use_bias: bool = True
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        return {
+            "fc1": Linear(self.d_model, self.d_ff, self.use_bias, self.dtype).init(named_key(key, "fc1")),
+            "fc2": Linear(self.d_ff, self.d_model, self.use_bias, self.dtype).init(named_key(key, "fc2")),
+        }
+
+    def __call__(self, params, x):
+        g, _ = activations.get(self.activation)
+        h = Linear(self.d_model, self.d_ff, self.use_bias, self.dtype)(params["fc1"], x)
+        return Linear(self.d_ff, self.d_model, self.use_bias, self.dtype)(params["fc2"], g(h))

@@ -1,0 +1,58 @@
+"""Minimal functional module system.
+
+Modules are frozen dataclasses holding *static* configuration; parameters are
+plain pytrees (nested dicts of jnp arrays) produced by ``Module.init(key)``
+and consumed by ``Module.__call__(params, *args)``.  This keeps everything
+jit/pjit-friendly (modules are hashable statics, params are explicit pytrees)
+and makes the DFA backward — which needs per-block ``jax.vjp`` over the param
+subtree — trivial to express.
+
+Stacked (scan-over-layers) parameters are produced with ``stack_init`` and
+consumed by ``jax.lax.scan`` in the model definitions: the leading axis of
+every leaf is the layer index.  This keeps HLO size depth-independent and
+bounds FSDP all-gather liveness to a single layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import prng
+
+Params = dict  # nested {str: Params | jax.Array}
+
+
+@dataclasses.dataclass(frozen=True)
+class Module:
+    """Base class — subclasses define init(key)->Params and __call__."""
+
+    def init(self, key: jax.Array) -> Params:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def param_shapes(self) -> Params:
+        """ShapeDtypeStructs of this module's params (no allocation)."""
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+
+def stack_init(module: Module, key: jax.Array, n: int) -> Params:
+    """Initialise ``n`` copies of a module with stacked (leading-axis) params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(module.init)(keys)
+
+
+def layer_slice(stacked: Params, i) -> Params:
+    """Select layer ``i`` from stacked params (dynamic index ok)."""
+    return jax.tree_util.tree_map(lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False), stacked)
+
+
+def named_key(key: jax.Array, name: str) -> jax.Array:
+    return prng.fold_name(key, name)
+
+
+def truncate_dtype(x: jax.Array, dtype) -> jax.Array:
+    if dtype is not None and jnp.issubdtype(x.dtype, jnp.floating):
+        return x.astype(dtype)
+    return x

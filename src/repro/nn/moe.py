@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN (qwen2-moe, kimi-k2).
+
+Dispatch uses the GShard/MaxText one-hot capacity formulation so the expert
+computation is a single static einsum over the expert axis — GSPMD shards the
+expert dimension over the `model` mesh axis and turns dispatch/combine into
+all-to-alls (expert parallelism).  Token dropping beyond capacity follows
+position-in-expert order; shared experts (qwen2-moe: 4, kimi: 1) run densely.
+
+Aux losses: standard load-balancing loss (Switch) + router z-loss, returned
+so the trainer can weight them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import GatedMLP, Linear
+from repro.nn.module import Module, named_key, stack_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoE(Module):
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    n_shared_experts: int = 0
+    d_ff_shared: int | None = None  # defaults to d_ff_expert per shared expert
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    norm_topk_prob: bool = True
+    # tokens are routed in groups of this size (GShard-style scan): bounds
+    # the (T, E, C) dispatch tensor to O(group·E·cap_group) regardless of
+    # global batch — essential at kimi-k2 scale (1M tokens/step).
+    group_size: int = 4096
+    # dispatch implementation:
+    #   einsum — GShard one-hot matmuls (MXU-dense but ~3× the useful flops:
+    #            dispatch+combine each cost T·E·C·d ≈ the expert matmuls)
+    #   gather — slot-indexed gather/scatter: zero matmul flops for routing
+    dispatch: str = "einsum"
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        expert = GatedMLP(self.d_model, self.d_ff_expert, self.activation, self.dtype)
+        p = {
+            "router": Linear(self.d_model, self.n_experts, dtype=self.dtype).init(named_key(key, "router")),
+            "experts": stack_init(expert, named_key(key, "experts"), self.n_experts),
+        }
+        if self.n_shared_experts:
+            d_sh = (self.d_ff_shared or self.d_ff_expert) * self.n_shared_experts
+            p["shared"] = GatedMLP(self.d_model, d_sh, self.activation, self.dtype).init(named_key(key, "shared"))
+        return p
+
+    def _route(self, params, x_flat):
+        """x_flat: (T, d). Returns (combine (T,E,C), dispatch (T,E,C), aux)."""
+        t = x_flat.shape[0]
+        e = self.n_experts
+        cap = max(1, int(self.capacity_factor * self.top_k * t / e))
+        logits = (x_flat @ params["router"]["w"]).astype(jnp.float32)  # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = jax.lax.top_k(probs, self.top_k)  # (T, K)
+        if self.norm_topk_prob:
+            topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+        # one-hot expert assignment per k-slot: (T, K, E)
+        assign = jax.nn.one_hot(topi, e, dtype=jnp.float32)
+        # position of each (token, slot) within its expert queue
+        flat_assign = assign.reshape(t * self.top_k, e)
+        pos_in_expert = (jnp.cumsum(flat_assign, axis=0) - flat_assign).reshape(t, self.top_k, e)
+        keep = (pos_in_expert < cap).astype(jnp.float32) * assign
+        pos = jnp.einsum("tke,tke->tk", pos_in_expert, keep).astype(jnp.int32)  # (T, K)
+        pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)  # (T, K, C)
+        dispatch = jnp.einsum("tke,tkc->tec", keep, pos_oh)  # (T, E, C) in {0,1}
+        combine = jnp.einsum("tk,tke,tkc->tec", topv, keep, pos_oh)
+        # aux losses
+        me = probs.mean(axis=0)  # (E,)
+        ce = assign.sum(axis=1).mean(axis=0)  # fraction routed per expert
+        lb_loss = e * jnp.sum(me * ce)
+        z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        dropped = 1.0 - keep.sum() / (t * self.top_k)
+        aux = {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}
+        return combine, dispatch, aux
+
+    def _route_topk(self, params, x_flat):
+        """Shared routing prelude: (topv (T,K), topi (T,K), keep, pos, cap, aux)."""
+        t = x_flat.shape[0]
+        e = self.n_experts
+        cap = max(1, int(self.capacity_factor * self.top_k * t / e))
+        logits = (x_flat @ params["router"]["w"]).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = jax.lax.top_k(probs, self.top_k)
+        if self.norm_topk_prob:
+            topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+        assign = jax.nn.one_hot(topi, e, dtype=jnp.float32)
+        flat_assign = assign.reshape(t * self.top_k, e)
+        pos_in_expert = (jnp.cumsum(flat_assign, axis=0) - flat_assign).reshape(t, self.top_k, e)
+        keep = (pos_in_expert < cap).astype(jnp.float32) * assign
+        pos = jnp.einsum("tke,tke->tk", pos_in_expert, keep).astype(jnp.int32)
+        me = probs.mean(axis=0)
+        ce = assign.sum(axis=1).mean(axis=0)
+        aux = {
+            "lb_loss": e * jnp.sum(me * ce),
+            "z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+            "dropped_frac": 1.0 - keep.sum() / (t * self.top_k),
+        }
+        return topv, topi, keep, pos, cap, aux
+
+    def _group_forward(self, params, x_flat):
+        """Route+compute one token group. x_flat: (Tg, d) -> (y, aux)."""
+        if self.dispatch == "gather":
+            return self._group_forward_gather(params, x_flat)
+        from repro.dist.sharding import annotate
+
+        combine, dispatch, aux = self._route(params, x_flat)
+        # dispatch tokens into per-expert buffers: (E, C, d)
+        expert_in = jnp.einsum("tec,td->ecd", dispatch.astype(x_flat.dtype), x_flat)
+        expert_in = annotate(expert_in, "expert_ecd")
+        expert = GatedMLP(self.d_model, self.d_ff_expert, self.activation, self.dtype)
+        expert_out = jax.vmap(expert)(params["experts"], expert_in)  # (E, C, d)
+        expert_out = annotate(expert_out, "expert_ecd")
+        y = jnp.einsum("tec,ecd->td", combine.astype(x_flat.dtype), expert_out)
+        return y, aux
+
+    def _group_forward_gather(self, params, x_flat):
+        """Slot-indexed dispatch: scatter token ids into (E·C) slots, gather
+        token rows, run experts, gather slot outputs back per (token, k).
+        Identical routing/capacity semantics to the einsum path with zero
+        routing matmul flops."""
+        from repro.dist.sharding import annotate
+
+        t, d = x_flat.shape
+        e = self.n_experts
+        topv, topi, keep, pos, cap, aux = self._route_topk(params, x_flat)
+        kept = keep.sum(-1) > 0  # (T, K) — this (token, k) slot was admitted
+        n_slots = e * cap
+        slot = topi * cap + pos  # (T, K)
+        slot = jnp.where(kept, slot, n_slots)  # dropped -> overflow slot
+        tok_ids = jnp.broadcast_to(jnp.arange(t)[:, None], slot.shape)
+        # slots are unique per (kept) (t, k) by construction of pos
+        slot_tok = jnp.zeros((n_slots + 1,), jnp.int32).at[slot.reshape(-1)].set(
+            tok_ids.reshape(-1).astype(jnp.int32), mode="drop")
+        slot_valid = jnp.zeros((n_slots + 1,), x_flat.dtype).at[slot.reshape(-1)].set(
+            1.0, mode="drop")
+        expert_in = x_flat[slot_tok[:n_slots]] * slot_valid[:n_slots, None]
+        expert_in = annotate(expert_in.reshape(e, cap, d), "expert_ecd")
+        expert = GatedMLP(self.d_model, self.d_ff_expert, self.activation, self.dtype)
+        expert_out = jax.vmap(expert)(params["experts"], expert_in)  # (E, C, d)
+        expert_out = annotate(expert_out, "expert_ecd")
+        out_flat = jnp.concatenate(
+            [expert_out.reshape(n_slots, d),
+             jnp.zeros((1, d), expert_out.dtype)], axis=0)
+        per_k = out_flat[slot]  # (T, K, d); overflow row is zeros
+        y = jnp.einsum("tk,tkd->td", topv.astype(per_k.dtype), per_k)
+        return y, aux
+
+    def __call__(self, params, x):
+        """x: (B, S, d) -> (y, aux).
+
+        Token groups are cut along the SEQUENCE axis ((B, chunk) tokens per
+        group) so the scanned group dim is never the batch-sharded dim —
+        scanning a sharded xs dim would force a full all-gather of the
+        activations in the scan (and its transpose in the vjp)."""
+        b, s, d = x.shape
+        t = b * s
+        chunk = max(1, self.group_size // b)
+        if t <= self.group_size or s % chunk != 0:
+            y, aux = self._group_forward(params, x.reshape(t, d))
+        else:
+            g = s // chunk
+            xg = x.reshape(b, g, chunk, d).swapaxes(0, 1)  # (g, B, chunk, d)
+
+            # remat: the (Tg,E,C) dispatch/combine tensors are recomputed in
+            # the backward instead of being saved per group — without this
+            # the stacked routing residuals dominate peak memory at
+            # kimi-k2 scale (hundreds of GB/device)
+            @jax.checkpoint
+            def group_fwd(params, xt):
+                yt, auxt = self._group_forward(params, xt.reshape(b * chunk, d))
+                return yt.reshape(b, chunk, d), auxt
+
+            def body(_, xt):
+                return None, group_fwd(params, xt)
+
+            _, (y, auxes) = jax.lax.scan(body, None, xg)
+            y = y.swapaxes(0, 1).reshape(t, d)
+            aux = jax.tree_util.tree_map(jnp.mean, auxes)
+        if self.n_shared_experts:
+            d_sh = (self.d_ff_shared or self.d_ff_expert) * self.n_shared_experts
+            y = y + GatedMLP(self.d_model, d_sh, self.activation, self.dtype)(
+                params["shared"], x.reshape(t, d))
+        return y.reshape(b, s, d), aux

@@ -1,0 +1,58 @@
+"""Normalisation layers (computed in f32, cast back)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.nn.module import Module
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm(Module):
+    dim: int
+    eps: float = 1e-6
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        del key
+        return {"scale": jnp.ones((self.dim,), self.dtype)}
+
+    def __call__(self, params, x):
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * (var + self.eps) ** -0.5
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm(Module):
+    dim: int
+    eps: float = 1e-5
+    use_bias: bool = True
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        del key
+        p = {"scale": jnp.ones((self.dim,), self.dtype)}
+        if self.use_bias:
+            p["bias"] = jnp.zeros((self.dim,), self.dtype)
+        return p
+
+    def __call__(self, params, x):
+        x32 = x.astype(jnp.float32)
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mean) * (var + self.eps) ** -0.5
+        y = y * params["scale"].astype(jnp.float32)
+        if self.use_bias:
+            y = y + params["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+
+
+def rms_normalize(x, eps: float = 1e-6):
+    """Parameter-free RMS normalisation (qk_norm building block)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * (var + eps) ** -0.5).astype(x.dtype)

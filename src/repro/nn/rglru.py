@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma — arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit is a diagonal linear recurrence
+
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+    a_t = exp(c · r_t · log σ(Λ)),  r_t = σ(W_a x_t),  i_t = σ(W_x x_t)
+
+Being diagonal & linear in h it admits ``lax.associative_scan`` — O(log S)
+depth — which is what we lower for training/prefill; decode is the O(1)
+per-step update.  The surrounding block is Griffin's recurrent block:
+(proj → causal conv → RG-LRU) ⊙ gelu(gate-proj) → out-proj.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import Linear
+from repro.nn.module import Module, named_key
+from repro.nn.ssm import causal_conv1d
+
+_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+def _log_a(params, r):
+    """log a_t = -c * r_t * softplus(Λ)  (log σ(Λ) = -softplus(-Λ); Griffin
+    parameterises Λ so that a = σ(Λ)^c ⇒ log a = c·log σ(Λ))."""
+    log_sig_lambda = -jax.nn.softplus(-params["lambda"].astype(jnp.float32))
+    return _C * r * log_sig_lambda
+
+
+def rglru_scan(x, r, i, params):
+    """Associative-scan RG-LRU. x, r, i: (B, S, D) f32. Returns h: (B,S,D)."""
+    log_a = _log_a(params, r)  # (B,S,D), <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably: 1 - exp(2 log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_s
+    return h
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUBlock(Module):
+    d_model: int
+    d_rnn: int
+    conv_width: int = 4
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        mk = lambda n, i, o: Linear(i, o, dtype=self.dtype).init(named_key(key, n))
+        # Λ init so that a^c spans ~(0.9, 0.999) as in Griffin
+        u = jax.random.uniform(named_key(key, "lambda"), (self.d_rnn,), minval=0.9, maxval=0.999)
+        lam = jnp.log(u ** (1 / _C) / (1 - u ** (1 / _C)))
+        return {
+            "in_x": mk("in_x", self.d_model, self.d_rnn),
+            "in_gate": mk("in_gate", self.d_model, self.d_rnn),
+            "conv_w": (jax.random.normal(named_key(key, "conv_w"), (self.conv_width, self.d_rnn)) * 0.1).astype(self.dtype),
+            "conv_b": jnp.zeros((self.d_rnn,), self.dtype),
+            "w_a": mk("w_a", self.d_rnn, self.d_rnn),
+            "w_i": mk("w_i", self.d_rnn, self.d_rnn),
+            "lambda": lam.astype(self.dtype),
+            "out": mk("out", self.d_rnn, self.d_model),
+        }
+
+    def _branch(self, params, u):
+        x = u @ params["in_x"]["w"]
+        x = causal_conv1d(x, params["conv_w"], params["conv_b"])
+        r = jax.nn.sigmoid((x @ params["w_a"]["w"]).astype(jnp.float32))
+        i = jax.nn.sigmoid((x @ params["w_i"]["w"]).astype(jnp.float32))
+        return x.astype(jnp.float32), r, i
+
+    def __call__(self, params, u):
+        """u: (B, S, d_model)."""
+        x, r, i = self._branch(params, u)
+        h = rglru_scan(x, r, i, params)
+        gate = jax.nn.gelu((u @ params["in_gate"]["w"]).astype(jnp.float32))
+        y = (h * gate).astype(u.dtype)
+        return y @ params["out"]["w"]
+
+    # ---- decode -----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int = 0, dtype=None):
+        del max_len
+        dt = dtype or self.dtype
+        return {
+            "h": jnp.zeros((batch, self.d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, self.conv_width - 1, self.d_rnn), dt),
+        }
+
+    def decode(self, params, u, cache, cache_len):
+        del cache_len
+        x_new = u @ params["in_x"]["w"]  # (B,1,D)
+        win = jnp.concatenate([cache["conv"], x_new], axis=1)
+        x = (jnp.einsum("bkc,kc->bc", win, params["conv_w"]) + params["conv_b"])[:, None, :]
+        r = jax.nn.sigmoid((x @ params["w_a"]["w"]).astype(jnp.float32))
+        i = jax.nn.sigmoid((x @ params["w_i"]["w"]).astype(jnp.float32))
+        xf = x.astype(jnp.float32)
+        log_a = _log_a(params, r)
+        a = jnp.exp(log_a)[:, 0]
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))[:, 0]
+        h = a * cache["h"] + beta * (i[:, 0] * xf[:, 0])
+        gate = jax.nn.gelu((u @ params["in_gate"]["w"]).astype(jnp.float32))
+        y = (h[:, None, :] * gate).astype(u.dtype) @ params["out"]["w"]
+        return y, {"h": h, "conv": win[:, 1:, :].astype(cache["conv"].dtype)}

@@ -1,0 +1,201 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Implements the chunked SSD algorithm: within chunks the quadratic (attention-
+like) form, across chunks a linear recurrence over per-chunk states.  The
+recurrence is a ``lax.scan`` over n_chunks steps (seq/chunk), so training cost
+is O(S·L·N) and decode is a constant-size state update (no KV cache) — this is
+what makes the ``long_500k`` cell feasible for this arch.
+
+Scalar-per-head decay A (as in Mamba-2), grouped B/C (n_groups=1 here),
+depthwise causal conv on (x‖B‖C), gated RMSNorm output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import Linear
+from repro.nn.module import Module, named_key
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: (B, S, C), w: (K, C), b: (C,)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Block(Module):
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 128
+    # split_proj: emit z / xBC / dt via three shard-aligned projections
+    # instead of one fused in_proj whose output dim (2·d_inner + 2·G·N + H)
+    # is not divisible by the model axis — the fused layout forces
+    # boundary-crossing splits (collective-permutes) on every layer (§Perf M1)
+    split_proj: bool = False
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    def init(self, key):
+        h = self.n_heads
+        if self.split_proj:
+            p = {
+                "in_z": Linear(self.d_model, self.d_inner, dtype=self.dtype).init(named_key(key, "in_z")),
+                "in_xbc": Linear(self.d_model, self.conv_dim, dtype=self.dtype).init(named_key(key, "in_xbc")),
+                "in_dt": Linear(self.d_model, h, dtype=self.dtype).init(named_key(key, "in_dt")),
+            }
+        else:
+            d_in_proj = 2 * self.d_inner + 2 * self.n_groups * self.d_state + h
+            p = {"in_proj": Linear(self.d_model, d_in_proj, dtype=self.dtype).init(named_key(key, "in_proj"))}
+        p.update({
+            "conv_w": (jax.random.normal(named_key(key, "conv_w"), (self.conv_width, self.conv_dim)) * 0.1).astype(self.dtype),
+            "conv_b": jnp.zeros((self.conv_dim,), self.dtype),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(self.dtype),
+            "D": jnp.ones((h,), self.dtype),
+            "dt_bias": jnp.zeros((h,), self.dtype),
+            "norm_scale": jnp.ones((self.d_inner,), self.dtype),
+            "out_proj": Linear(self.d_inner, self.d_model, dtype=self.dtype).init(named_key(key, "out_proj")),
+        })
+        return p
+
+    def _project_in(self, params, u):
+        """-> (z, xBC_preconv, dt_raw)."""
+        if self.split_proj:
+            return (u @ params["in_z"]["w"], u @ params["in_xbc"]["w"],
+                    u @ params["in_dt"]["w"])
+        proj = u @ params["in_proj"]["w"]
+        z, xBC, dt_raw = jnp.split(
+            proj, [self.d_inner, self.d_inner + self.conv_dim], axis=-1)
+        return z, xBC, dt_raw
+
+    def _split(self, params, u):
+        """in_proj + conv → (z, x, B, C, dt). u: (B,S,d_model)."""
+        h = self.n_heads
+        gn = self.n_groups * self.d_state
+        z, xBC, dt_raw = self._project_in(params, u)
+        xBC = jax.nn.silu(causal_conv1d(xBC, params["conv_w"], params["conv_b"]))
+        x, bmat, cmat = jnp.split(xBC, [self.d_inner, self.d_inner + gn], axis=-1)
+        dt = _softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+        return z, x, bmat, cmat, dt
+
+    def __call__(self, params, u):
+        """u: (B, S, d_model) -> (B, S, d_model). S must be divisible by chunk
+        (models pad/choose shapes accordingly)."""
+        bsz, seq, _ = u.shape
+        hn, pd, nst = self.n_heads, self.head_dim, self.d_state
+        z, x, bmat, cmat, dt = self._split(params, u)
+        x = x.reshape(bsz, seq, hn, pd)
+        bmat = bmat.reshape(bsz, seq, self.n_groups, nst)
+        cmat = cmat.reshape(bsz, seq, self.n_groups, nst)
+        # broadcast groups → heads
+        rep = hn // self.n_groups
+        bh = jnp.repeat(bmat, rep, axis=2)  # (B,S,H,N)
+        ch = jnp.repeat(cmat, rep, axis=2)
+        a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) negative
+        l = dt * a_neg  # (B,S,H) log-decay per step (<0)
+        dtx = (dt[..., None] * x.astype(jnp.float32))  # (B,S,H,P)
+
+        q = self.chunk if seq % self.chunk == 0 else seq
+        nc = seq // q
+        rs = lambda t: t.reshape((bsz, nc, q) + t.shape[2:])
+        lc, dtxc, bc, cc = rs(l), rs(dtx), rs(bh.astype(jnp.float32)), rs(ch.astype(jnp.float32))
+        cum = jnp.cumsum(lc, axis=2)  # (B,nc,q,H) cumulative log decay
+        # --- intra-chunk (quadratic within chunk) ---
+        # decay(t,i) = exp(cum_t - cum_i) for i<=t
+        diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,q_t,q_i,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        dec = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bcthn,bcihn->bctih", cc, bc) * dec.transpose(0, 1, 2, 3, 4)
+        y_intra = jnp.einsum("bctih,bcihp->bcthp", scores, dtxc)
+        # --- chunk states ---
+        last = cum[:, :, -1:, :]  # (B,nc,1,H)
+        w_state = jnp.exp(last - cum)  # decay from position i to chunk end
+        s_chunk = jnp.einsum("bcihn,bcihp->bchnp", bc * w_state[..., None], dtxc)
+        chunk_decay = jnp.exp(last[:, :, 0, :])  # (B,nc,H)
+
+        def scan_fn(s_prev, xs):
+            s_c, dec_c = xs  # (B,H,N,P), (B,H)
+            s_new = s_prev * dec_c[:, :, None, None] + s_c
+            return s_new, s_prev
+
+        s0 = jnp.zeros((bsz, hn, nst, pd), jnp.float32)
+        _, s_before = jax.lax.scan(
+            scan_fn, s0,
+            (s_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+        s_before = s_before.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P) state at chunk start
+        # --- inter-chunk contribution ---
+        y_inter = jnp.einsum("bcthn,bchnp->bcthp", cc * jnp.exp(cum)[..., None], s_before)
+        y = (y_intra + y_inter).reshape(bsz, seq, hn, pd)
+        y = y + params["D"].astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+        y = y.reshape(bsz, seq, self.d_inner)
+        # gated RMSNorm then out_proj
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+        y = y * (var + 1e-6) ** -0.5 * params["norm_scale"].astype(jnp.float32)
+        return (y.astype(u.dtype)) @ params["out_proj"]["w"]
+
+    # ---- decode -----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int = 0, dtype=None):
+        del max_len
+        dt = dtype or self.dtype
+        return {
+            "ssm": jnp.zeros((batch, self.n_heads, self.d_state, self.head_dim), jnp.float32),
+            "conv": jnp.zeros((batch, self.conv_width - 1, self.conv_dim), dt),
+        }
+
+    def decode(self, params, u, cache, cache_len):
+        """u: (B, 1, d_model). O(1) state update."""
+        del cache_len
+        bsz = u.shape[0]
+        hn, pd, nst = self.n_heads, self.head_dim, self.d_state
+        gn = self.n_groups * self.d_state
+        z, xBC_new, dt_raw = self._project_in(params, u)
+        # conv over ring of last (k-1) inputs + current
+        win = jnp.concatenate([cache["conv"], xBC_new], axis=1)  # (B, k, conv_dim)
+        xBC = jnp.einsum("bkc,kc->bc", win, params["conv_w"]) + params["conv_b"]
+        xBC = jax.nn.silu(xBC)[:, None, :]
+        x, bmat, cmat = jnp.split(xBC, [self.d_inner, self.d_inner + gn], axis=-1)
+        dt = _softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+        x = x.reshape(bsz, hn, pd).astype(jnp.float32)
+        rep = hn // self.n_groups
+        bh = jnp.repeat(bmat.reshape(bsz, self.n_groups, nst), rep, axis=1).astype(jnp.float32)
+        chh = jnp.repeat(cmat.reshape(bsz, self.n_groups, nst), rep, axis=1).astype(jnp.float32)
+        a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))
+        dec = jnp.exp(dt * a_neg)  # (B,H)
+        s_new = cache["ssm"] * dec[:, :, None, None] + jnp.einsum("bhn,bhp->bhnp", bh * dt[..., None], x)
+        y = jnp.einsum("bhn,bhnp->bhp", chh, s_new)
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * x
+        y = y.reshape(bsz, 1, self.d_inner)
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+        y = y * (var + 1e-6) ** -0.5 * params["norm_scale"].astype(jnp.float32)
+        y = y.astype(u.dtype) @ params["out_proj"]["w"]
+        new_cache = {"ssm": s_new, "conv": win[:, 1:, :].astype(cache["conv"].dtype)}
+        return y, new_cache

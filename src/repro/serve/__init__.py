@@ -1,0 +1,6 @@
+from repro.serve import decode, engine
+from repro.serve.decode import cache_shardings, make_prefill, make_serve_step
+from repro.serve.engine import Engine, Request
+
+__all__ = ["decode", "engine", "cache_shardings", "make_prefill",
+           "make_serve_step", "Engine", "Request"]

@@ -1,0 +1,94 @@
+"""Distributed decode: KV-cache sharding policy + jit'd serve_step builders.
+
+Cache placement policy (per leaf, by rank/shape — applied uniformly across
+arch families):
+
+* rank-4 attention caches (B, S, KVH, D):
+    - KVH % model_axis == 0  → shard heads on `model` (zero-collective decode)
+    - elif D % model_axis == 0 → shard head_dim on `model` (§Perf K4): the
+      per-token cache scatter stays shard-local (no SPMD full-remat of the
+      cache) and the QK/AV contractions become clean partial-sum psums
+    - else                   → shard the *sequence* dim on `model`
+      (flash-decode style: per-shard partial attention, the softmax over the
+      sharded axis lowers to max/sum all-reduces — GSPMD's logsumexp combine)
+* rank-3 MLA latent caches (B, S, R): sequence dim on `model`
+* SSM / RG-LRU / conv states: batch on (pod, data); replicate feature dims
+  (they are small constants per sequence)
+* batch dim always on (pod, data) when divisible (decode_32k: 128 over 32;
+  long_500k: batch 1 → latency-bound, batch unsharded by design)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import MODEL, batch_axes
+from repro.utils import tree as tree_util
+
+
+def cache_shardings(mesh, caches):
+    """NamedShardings for a stacked (L leading axis) cache pytree."""
+    b = batch_axes(mesh)
+    bsz_div = lambda n: n % _size(mesh, b) == 0
+    m = mesh.shape[MODEL]
+
+    def assign(path, leaf):
+        del path
+        # leaves are stacked: (L, B, ...) — index 1 is batch
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and bsz_div(shape[1]):
+            spec[1] = b
+        if len(shape) == 5:  # (L, B, S, KVH, D) attention cache
+            if shape[3] % m == 0:
+                spec[3] = MODEL
+            elif shape[4] % m == 0:
+                spec[4] = MODEL  # head_dim sharding (K4)
+            elif shape[2] % m == 0:
+                spec[2] = MODEL
+        elif len(shape) == 4:  # (L, B, S, R) MLA latent / (L,B,H,D) misc
+            if shape[2] % m == 0 and shape[2] >= 1024:  # sequence-like dim
+                spec[2] = MODEL
+        return NamedSharding(mesh, P(*spec))
+
+    return tree_util.path_map(assign, caches)
+
+
+def _size(mesh, axes) -> int:
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def make_serve_step(model, *, sample: str = "greedy", whisper_enc=False):
+    """Returns step(params, token, caches, cache_len[, enc]) ->
+    (next_token, logits, new_caches)."""
+
+    def step(params, token, caches, cache_len, *extra):
+        if whisper_enc:
+            logits, new_caches = model.decode_step(params, token, extra[0], caches, cache_len)
+        else:
+            logits, new_caches = model.decode_step(params, token, caches, cache_len)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        else:
+            raise ValueError(sample)
+        return nxt, logits, new_caches
+
+    return step
+
+
+def make_prefill(model):
+    """Forward over the prompt producing logits (B, S, V).  (The engine's
+    cache-filling path decodes incrementally; large-batch prefill compute is
+    exercised by this function — the dry-run's `prefill` kind.)"""
+
+    def prefill(params, batch):
+        x0 = model.embed(params, batch)
+        x_final, _, _ = model.run_segments(params, x0)
+        return model.head_logits(params, x_final, batch)
+
+    return prefill

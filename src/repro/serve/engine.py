@@ -1,0 +1,98 @@
+"""Batched serving engine: continuous-batching-lite request loop.
+
+Holds a fixed pool of batch slots with per-slot cache length; requests are
+admitted into free slots, prompts are consumed token-by-token (teacher
+forcing into the cache), then generation proceeds greedily until EOS or
+max_new.  Single jit'd decode_step per tick for the whole batch — the
+serving analogue of the paper's "single operational cycle" claim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.decode import make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list
+    max_new: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model, params, *, batch_slots: int = 8, max_len: int = 512,
+                 eos_id: int | None = None):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.caches = model.init_caches(batch_slots, max_len)
+        self.cache_len = jnp.zeros((batch_slots,), jnp.int32)
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self._step = jax.jit(make_serve_step(model))
+        self._requests: list[Request | None] = [None] * batch_slots
+        self._pending: list[Request] = []
+        # per-slot queue of forced (prompt) tokens remaining
+        self._forced: list[list] = [[] for _ in range(batch_slots)]
+
+    def submit(self, req: Request):
+        self._pending.append(req)
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self._requests[i] is None and self._pending:
+                req = self._pending.pop(0)
+                self._requests[i] = req
+                self._forced[i] = list(req.prompt[1:])
+                self.tokens = self.tokens.at[i, 0].set(req.prompt[0])
+                self.cache_len = self.cache_len.at[i].set(0)
+                # reset this slot's cache (zeros are fine: length mask guards)
+                self.caches = jax.tree_util.tree_map(
+                    lambda c: c.at[:, i].set(0), self.caches)
+
+    def tick(self):
+        """One synchronous decode step across all active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self._requests) if r is not None]
+        if not active:
+            return False
+        nxt, logits, self.caches = self._step(
+            self.params, self.tokens, self.caches, self.cache_len)
+        del logits
+        nxt = np.asarray(nxt)
+        self.cache_len = self.cache_len + jnp.array(
+            [1 if self._requests[i] is not None else 0 for i in range(self.slots)],
+            jnp.int32)
+        new_tokens = np.asarray(self.tokens).copy()
+        for i in active:
+            req = self._requests[i]
+            if self._forced[i]:
+                new_tokens[i, 0] = self._forced[i].pop(0)  # teacher-force prompt
+                continue
+            tok = int(nxt[i, 0])
+            req.out.append(tok)
+            new_tokens[i, 0] = tok
+            done = (self.eos is not None and tok == self.eos) or len(req.out) >= req.max_new
+            if done or int(self.cache_len[i]) >= self.max_len - 1:
+                req.done = True
+                self._requests[i] = None
+        self.tokens = jnp.asarray(new_tokens)
+        return True
+
+    def run(self, requests: list[Request], max_ticks: int = 10_000):
+        for r in requests:
+            self.submit(r)
+        ticks = 0
+        while (self._pending or any(r is not None for r in self._requests)) and ticks < max_ticks:
+            if not self.tick():
+                break
+            ticks += 1
+        return requests, ticks

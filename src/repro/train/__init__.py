@@ -1,0 +1,5 @@
+from repro.train import checkpoint, optimizer, schedule
+from repro.train.optimizer import AdamW, SGDM
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["checkpoint", "optimizer", "schedule", "AdamW", "SGDM", "Trainer", "TrainerConfig"]

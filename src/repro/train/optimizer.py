@@ -1,0 +1,114 @@
+"""Optimizers (from scratch — no optax): SGD+momentum (the paper's choice:
+lr 0.01, momentum 0.9) and AdamW for the LM examples.  Both support global
+gradient-norm clipping and schedules (callable lr)."""
+
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree as tree_util
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_util.global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDM:
+    lr: typing.Any = 0.01
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    nesterov: bool = False
+    clip_norm: float | None = None
+    momentum_dtype: typing.Any = None  # None -> same as param dtype
+
+    def init(self, params):
+        dt = lambda p: self.momentum_dtype or p.dtype
+        return {
+            "mom": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dt(p)), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = _lr_at(self.lr, step)
+        norm = None
+        if self.clip_norm is not None:
+            grads, norm = clip_by_global_norm(grads, self.clip_norm)
+
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32)
+            if self.weight_decay:
+                g32 = g32 + self.weight_decay * p.astype(jnp.float32)
+            m_new = self.momentum * m.astype(jnp.float32) + g32
+            d = (g32 + self.momentum * m_new) if self.nesterov else m_new
+            p_new = p.astype(jnp.float32) - lr * d
+            return p_new.astype(p.dtype), m_new.astype(m.dtype)
+
+        flat = jax.tree_util.tree_map(upd, grads, state["mom"], params)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_mom = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        info = {"lr": lr}
+        if norm is not None:
+            info["grad_norm"] = norm
+        return new_params, {"mom": new_mom, "step": step}, info
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: typing.Any = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float | None = 1.0
+    state_dtype: typing.Any = jnp.float32
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = _lr_at(self.lr, step)
+        norm = None
+        if self.clip_norm is not None:
+            grads, norm = clip_by_global_norm(grads, self.clip_norm)
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = self.b1 * m + (1 - self.b1) * g32
+            v_new = self.b2 * v + (1 - self.b2) * jnp.square(g32)
+            mh = m_new / c1
+            vh = v_new / c2
+            d = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * d
+            return p_new.astype(p.dtype), m_new.astype(self.state_dtype), v_new.astype(self.state_dtype)
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        leaf = lambda x: isinstance(x, tuple)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=leaf)
+        new_m = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=leaf)
+        new_v = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=leaf)
+        info = {"lr": lr}
+        if norm is not None:
+            info["grad_norm"] = norm
+        return new_params, {"m": new_m, "v": new_v, "step": step}, info

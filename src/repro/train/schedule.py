@@ -1,0 +1,29 @@
+"""Learning-rate schedules (callables of the int step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = peak * step / max(1, warmup_steps)
+        t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def linear_decay(peak: float, total_steps: int):
+    def fn(step):
+        t = jnp.clip(step / max(1, total_steps), 0.0, 1.0)
+        return jnp.float32(peak * (1.0 - t))
+
+    return fn

@@ -1,0 +1,174 @@
+"""Trainer: jit'd train step (DFA or BP), microbatch accumulation,
+fault-tolerant fit loop with checkpoint/auto-resume, straggler deadline
+hooks, and CSV metric logging.
+
+Fault-tolerance contract: all training randomness (photonic noise, data
+order) is a pure function of (seed, step), so `restore()` + `fit()` replays
+identically after a crash — verified by tests/test_checkpoint.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfa as dfa_lib
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import SGDM
+from repro.utils import prng
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    algo: str = "dfa"  # dfa | bp
+    dfa: dfa_lib.DFAConfig = dataclasses.field(default_factory=dfa_lib.DFAConfig)
+    optimizer: typing.Any = dataclasses.field(default_factory=SGDM)
+    seed: int = 0
+    microbatches: int = 1
+    ckpt_dir: str | None = None
+    ckpt_every: int = 500
+    keep_ckpts: int = 3
+    log_every: int = 50
+    log_path: str | None = None
+    # straggler mitigation: per-step wall deadline (None = off). On real
+    # multi-host deployments a step exceeding the deadline raises through
+    # the supervisor which restarts the slow host from the last snapshot.
+    step_deadline_s: float | None = None
+
+
+class Trainer:
+    def __init__(self, model, cfg: TrainerConfig):
+        self.model = model
+        self.cfg = cfg
+        if cfg.algo == "dfa":
+            self._vg = dfa_lib.value_and_grad(model, cfg.dfa)
+        elif cfg.algo == "bp":
+            self._vg = dfa_lib.bp_value_and_grad(model)
+        else:
+            raise ValueError(cfg.algo)
+        self._step_fn = jax.jit(self._train_step)
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.keep_ckpts) if cfg.ckpt_dir else None
+        self._log_file = None
+
+    # ---------- state ----------
+    def init_state(self, key=None):
+        key = key if key is not None else prng.key(self.cfg.seed)
+        params = self.model.init(key)
+        fb = dfa_lib.init_feedback(self.model, prng.fold_name(key, "feedback"), self.cfg.dfa)
+        opt_state = self.cfg.optimizer.init(params)
+        return {"params": params, "fb": fb, "opt": opt_state,
+                "step": jnp.zeros((), jnp.int32)}
+
+    # ---------- core step ----------
+    def _grads(self, params, fb, batch, rng):
+        mb = self.cfg.microbatches
+        if mb <= 1:
+            return self._vg(params, fb, batch, rng)
+
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+        batches = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, xs):
+            acc, metrics_acc = carry
+            micro, i = xs
+            (loss, metrics), grads = self._vg(params, fb, micro, jax.random.fold_in(rng, i))
+            acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+            metrics_acc = jax.tree_util.tree_map(jnp.add, metrics_acc, metrics)
+            return (acc, metrics_acc), loss
+
+        (l0, m0), g0 = self._vg(
+            params, fb, jax.tree_util.tree_map(lambda x: x[0], batches),
+            jax.random.fold_in(rng, 0))
+        rest = jax.tree_util.tree_map(lambda x: x[1:], batches)
+        (gsum, msum), losses = jax.lax.scan(
+            body, (g0, m0), (rest, jnp.arange(1, mb)))
+        grads = jax.tree_util.tree_map(lambda g: g / mb, gsum)
+        metrics = jax.tree_util.tree_map(lambda m: m / mb, msum)
+        loss = (l0 + jnp.sum(losses)) / mb
+        return (loss, metrics), grads
+
+    def _train_step(self, state, batch):
+        rng = prng.step_key(self.cfg.seed, state["step"], "noise")
+        (loss, metrics), grads = self._grads(state["params"], state["fb"], batch, rng)
+        new_params, new_opt, info = self.cfg.optimizer.update(
+            grads, state["opt"], state["params"])
+        metrics = dict(metrics)
+        metrics.update(info)
+        new_state = {"params": new_params, "fb": state["fb"], "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    def step(self, state, batch):
+        t0 = time.monotonic()
+        state, metrics = self._step_fn(state, batch)
+        if self.cfg.step_deadline_s is not None:
+            jax.block_until_ready(state["step"])
+            dt = time.monotonic() - t0
+            if dt > self.cfg.step_deadline_s:
+                raise TimeoutError(
+                    f"step {int(state['step'])} exceeded deadline "
+                    f"({dt:.1f}s > {self.cfg.step_deadline_s}s) — straggler")
+        return state, metrics
+
+    # ---------- loop ----------
+    def restore_or_init(self, key=None):
+        state = self.init_state(key)
+        if self.ckpt is not None:
+            restored, step = self.ckpt.restore(state)
+            if restored is not None:
+                return restored, int(step)
+        return state, 0
+
+    def _log(self, step, metrics):
+        if self.cfg.log_path is None:
+            return
+        row = {k: float(v) for k, v in metrics.items()}
+        if self._log_file is None:
+            os.makedirs(os.path.dirname(os.path.abspath(self.cfg.log_path)), exist_ok=True)
+            new = not os.path.exists(self.cfg.log_path)
+            self._log_file = open(self.cfg.log_path, "a")
+            if new:
+                self._log_file.write("step," + ",".join(sorted(row)) + "\n")
+        self._log_file.write(
+            f"{step}," + ",".join(str(row[k]) for k in sorted(row)) + "\n")
+        self._log_file.flush()
+
+    def fit(self, data_fn, total_steps: int, eval_fn=None, verbose=True):
+        """data_fn(step) -> batch (deterministic — restart-safe)."""
+        state, start = self.restore_or_init()
+        metrics = {}
+        for step in range(start, total_steps):
+            batch = data_fn(step)
+            state, metrics = self.step(state, batch)
+            if (step + 1) % self.cfg.log_every == 0 or step + 1 == total_steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                self._log(step + 1, metrics)
+                if verbose:
+                    txt = " ".join(f"{k}={v:.4f}" for k, v in sorted(m.items()))
+                    print(f"[step {step + 1}/{total_steps}] {txt}", flush=True)
+            if self.ckpt is not None and (step + 1) % self.cfg.ckpt_every == 0:
+                self.ckpt.save(step + 1, state)
+        if self.ckpt is not None:
+            self.ckpt.save(total_steps, state)
+        if eval_fn is not None:
+            return state, eval_fn(state)
+        return state, metrics
+
+    # ---------- eval ----------
+    def evaluate(self, state, batches) -> dict:
+        loss_fn = jax.jit(lambda p, b: self.model.loss(p, b))
+        total = {}
+        n = 0
+        for batch in batches:
+            _, metrics = loss_fn(state["params"], batch)
+            for k, v in metrics.items():
+                total[k] = total.get(k, 0.0) + float(v)
+            n += 1
+        return {k: v / max(n, 1) for k, v in total.items()}

@@ -1,0 +1,3 @@
+from repro.utils import hlo, prng, tree
+
+__all__ = ["hlo", "prng", "tree"]

@@ -1,0 +1,137 @@
+"""HLO text analysis: collective-bytes accounting for the roofline.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so we parse the (stable-)HLO/optimized-HLO text and sum the operand
+sizes of every communication op.  This powers the third roofline term:
+
+    collective term = collective_bytes / (chips * link_bw)
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "s32": 4,
+    "u32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "bf16": 2,
+    "f16": 2,
+    "f32": 4,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "token": 0,
+}
+
+# Collective op names; "-start" variants are the async forms (count those,
+# skip the matching "-done" which carries the same payload).
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+@dataclass
+class CollectiveStats:
+    """Per-op-kind byte and instance counts from one HLO module."""
+
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    instances: list = field(default_factory=list)  # (kind, bytes, line excerpt)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> str:
+        rows = [
+            f"  {kind:24s} n={self.count_by_kind[kind]:4d} bytes={self.bytes_by_kind[kind]:.3e}"
+            for kind in sorted(self.bytes_by_kind)
+        ]
+        rows.append(f"  {'TOTAL':24s} n={self.total_count:4d} bytes={self.total_bytes:.3e}")
+        return "\n".join(rows)
+
+
+def _op_kind(line: str) -> str | None:
+    """Return the collective kind if this HLO line is a collective op."""
+    # Lines look like:  %all-gather.3 = bf16[...]{...} all-gather(bf16[...] %x), ...
+    m = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z0-9-]+)\(", line)
+    if not m:
+        return None
+    op = m.group(1)
+    for kind in _COLLECTIVES:
+        if op == kind or op == kind + "-start":
+            return kind
+        if op == kind + "-done":
+            return "_done"
+    return None
+
+
+def _operand_bytes(line: str) -> int:
+    """Sum the byte sizes of operand shapes (inside the call parens)."""
+    paren = line.find("(")
+    if paren < 0:
+        return 0
+    body = line[paren:]
+    total = 0
+    for m in _SHAPE_RE.finditer(body):
+        total += shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def analyze_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        kind = _op_kind(line)
+        if kind is None or kind == "_done":
+            continue
+        b = _operand_bytes(line)
+        stats.bytes_by_kind[kind] += b
+        stats.count_by_kind[kind] += 1
+        stats.instances.append((kind, b, line.strip()[:160]))
+    return stats
+
+
+def count_op(hlo_text: str, op_name: str) -> int:
+    """Count occurrences of an HLO op (e.g. 'dot', 'fusion') by kind."""
+    n = 0
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z0-9-]+)\(", line)
+        if m and m.group(1) == op_name:
+            n += 1
+    return n

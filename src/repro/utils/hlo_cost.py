@@ -1,0 +1,303 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — for
+scan-over-layers models that undercounts FLOPs/bytes/collectives by the
+layer count.  This walker parses the optimized (post-SPMD) HLO text, builds
+the computation call graph, extracts loop trip counts (from the
+``known_trip_count`` backend_config, falling back to the loop-condition
+constant), and accumulates per-device:
+
+* dot FLOPs               (2 · |out| · contracted)
+* HBM-traffic proxy bytes (operand+output bytes of non-bookkeeping ops at
+  computation top level; fused-computation internals excluded — fusion
+  intermediates stay on-core)
+* collective bytes        (by kind: all-gather / all-reduce / …)
+
+Operands in optimized HLO are name references (no inline types), so each
+computation keeps a name → shape table and resolves references.
+
+All numbers are PER-DEVICE (post-partitioning shapes).  The roofline terms
+are therefore  t_x = per_device_x / per_chip_rate  — equivalent to the
+global formulation global_x / (chips · rate).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.utils.hlo import _COLLECTIVES, shape_bytes
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OP_HEAD = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OP_NAME = re.compile(r"\s*([a-zA-Z0-9\-]+)\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"\bcalls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"\bbody=%?([\w.\-]+)")
+_COND_RE = re.compile(r"\bcondition=%?([\w.\-]+)")
+_APPLY_RE = re.compile(r"\bto_apply=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_BOOKKEEPING = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _type_sizes(type_str: str):
+    """(total_bytes, dims_of_first_shape) for an HLO type string."""
+    total = 0
+    first_dims = None
+    for m in _SHAPE_RE.finditer(type_str):
+        total += shape_bytes(m.group(1), m.group(2))
+        if first_dims is None:
+            dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+            first_dims = dims
+    return total, (first_dims or [])
+
+
+@dataclass
+class _Op:
+    name: str
+    op: str
+    out_bytes: int
+    out_dims: list
+    line: str
+    operands: list  # operand names (top-level call parens)
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: list = field(default_factory=list)
+    types: dict = field(default_factory=dict)  # name -> (bytes, dims)
+    max_const: int = 1
+
+
+def _split_operands(line: str, op_start: int) -> tuple[list, str]:
+    """Operand names inside the op's call parens + the trailing attr text."""
+    i = line.find("(", op_start)
+    if i < 0:
+        return [], ""
+    depth = 0
+    j = i
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    inner = line[i + 1 : j]
+    rest = line[j + 1 :]
+    return _OPERAND_RE.findall(inner), rest
+
+
+def _parse_op_line(line: str):
+    """Parse '%name = TYPE op(...)' — TYPE may be a tuple containing
+    '/*index=N*/' comments, so it is scanned with balanced parens."""
+    mh = _OP_HEAD.match(line)
+    if not mh:
+        return None
+    name = mh.group(1)
+    i = mh.end()
+    if i >= len(line):
+        return None
+    if line[i] == "(":  # tuple type: balance parens
+        depth = 0
+        j = i
+        for j in range(i, len(line)):
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        out_type = line[i : j + 1]
+        rest = line[j + 1 :]
+    else:  # scalar/array type token: up to whitespace before the op name
+        m = re.match(r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?", line[i:])
+        if not m:
+            return None
+        out_type = m.group(0)
+        rest = line[i + m.end():]
+    mo = _OP_NAME.match(rest)
+    if not mo:
+        return None
+    op = mo.group(1)
+    return name, out_type, op
+
+
+def parse_computations(text: str) -> dict:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and _COMP_HDR.match(line):
+            cur = _Comp(_COMP_HDR.match(line).group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed is None:
+            continue
+        name, out_type, op = parsed
+        out_bytes, out_dims = _type_sizes(out_type)
+        op_paren = line.find(op + "(", len(name))
+        operands, _rest = _split_operands(line, op_paren + len(op))
+        cur.types[name] = (out_bytes, out_dims)
+        cur.ops.append(_Op(name, op, out_bytes, out_dims, line, operands))
+        for mc in _CONST_RE.finditer(line):
+            cur.max_const = max(cur.max_const, int(mc.group(1)))
+    return comps
+
+
+def _dot_flops(op: _Op, types: dict) -> float:
+    out_elems = 1
+    for d in op.out_dims:
+        out_elems *= d
+    lhs = types.get(op.operands[0]) if op.operands else None
+    if lhs is None:
+        return 2.0 * out_elems  # unknown contraction: floor estimate
+    lhs_dims = lhs[1]
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    contracted = 1
+    if mc and mc.group(1):
+        for i in mc.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contracted *= lhs_dims[idx]
+    return 2.0 * out_elems * contracted
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "mem_bytes": self.mem_bytes,
+            "collective_bytes": self.collective_total,
+            "coll_bytes_by_kind": dict(self.coll_bytes),
+            "coll_count_by_kind": dict(self.coll_count),
+        }
+
+
+def _comp_local_cost(comp: _Comp):
+    """(flops, mem_bytes, coll_bytes, coll_count, children) for one
+    computation, children = [(name, trips|None, include_mem)]."""
+    flops = 0.0
+    mem = 0.0
+    coll_b: dict = {}
+    coll_c: dict = {}
+    children = []
+
+    def operand_bytes(op: _Op) -> float:
+        return float(sum(comp.types.get(o, (0, []))[0] for o in op.operands))
+
+    for op in comp.ops:
+        base = op.op[:-6] if op.op.endswith("-start") else op.op
+        if base.endswith("-done"):
+            continue
+        if base in _COLLECTIVES:
+            b = operand_bytes(op)
+            coll_b[base] = coll_b.get(base, 0.0) + b
+            coll_c[base] = coll_c.get(base, 0) + 1
+            mem += b + op.out_bytes
+            continue
+        if op.op in _BOOKKEEPING:
+            continue
+        if op.op == "dot":
+            flops += _dot_flops(op, comp.types)
+            mem += operand_bytes(op) + op.out_bytes
+            continue
+        if op.op == "while":
+            mt = _TRIP_RE.search(op.line)
+            trips = int(mt.group(1)) if mt else None
+            mb = _BODY_RE.search(op.line)
+            mc = _COND_RE.search(op.line)
+            if mb:
+                children.append((mb.group(1), trips, True, mc.group(1) if mc else None))
+            continue
+        if op.op == "fusion":
+            mcall = _CALLS_RE.search(op.line)
+            if mcall:
+                children.append((mcall.group(1), 1, False, None))
+            mem += operand_bytes(op) + op.out_bytes
+            continue
+        if op.op == "call":
+            ma = _APPLY_RE.search(op.line) or _CALLS_RE.search(op.line)
+            if ma:
+                children.append((ma.group(1), 1, True, None))
+            continue
+        if op.op == "conditional":
+            mbr = _BRANCH_RE.search(op.line)
+            names = []
+            if mbr:
+                names = [n.strip().lstrip("%") for n in mbr.group(1).split(",")]
+            names += list(_TF_RE.findall(op.line))
+            for n in names:
+                children.append((n, 1, True, None))
+            mem += operand_bytes(op) + op.out_bytes
+            continue
+        # generic op (HBM traffic proxy)
+        mem += operand_bytes(op) + op.out_bytes
+    return flops, mem, coll_b, coll_c, children
+
+
+def analyze(text: str) -> HloCost:
+    comps = parse_computations(text)
+    local: dict[str, tuple] = {n: _comp_local_cost(c) for n, c in comps.items()
+                               if n != "__entry__"}
+    memo: dict[tuple, HloCost] = {}
+
+    def walk(name: str, include_mem: bool) -> HloCost:
+        key = (name, include_mem)
+        if key in memo:
+            return memo[key]
+        out = HloCost()
+        memo[key] = out
+        if name not in local:
+            return out
+        flops, mem, coll_b, coll_c, children = local[name]
+        out.flops += flops
+        if include_mem:
+            out.mem_bytes += mem
+        for k, v in coll_b.items():
+            out.coll_bytes[k] = out.coll_bytes.get(k, 0.0) + v
+        for k, v in coll_c.items():
+            out.coll_count[k] = out.coll_count.get(k, 0) + v
+        for callee, trips, child_mem, cond_name in children:
+            if trips is None:
+                cond_comp = comps.get(cond_name or callee)
+                trips = max(1, cond_comp.max_const if cond_comp else 1)
+            sub = walk(callee, include_mem and child_mem)
+            out.flops += trips * sub.flops
+            out.mem_bytes += trips * sub.mem_bytes
+            for k, v in sub.coll_bytes.items():
+                out.coll_bytes[k] = out.coll_bytes.get(k, 0.0) + trips * v
+            for k, v in sub.coll_count.items():
+                out.coll_count[k] = out.coll_count.get(k, 0) + trips * v
+        return out
+
+    entry = comps.get("__entry__")
+    if entry is None:
+        return HloCost()
+    return walk(entry.name, True)

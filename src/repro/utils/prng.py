@@ -1,0 +1,51 @@
+"""PRNG helpers.
+
+Keys are threaded explicitly everywhere; named folding keeps streams
+reproducible and restart-safe (the data pipeline and the photonic noise
+model both derive their randomness from (base_seed, step, name) so a
+checkpoint-restart replays the identical stream).
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+
+
+def key(seed: int) -> jax.Array:
+    return jax.random.PRNGKey(seed)
+
+
+def _name_to_int(name: str) -> int:
+    # Stable across processes (unlike hash()).
+    return int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+
+
+def fold_name(k: jax.Array, name: str) -> jax.Array:
+    """Fold a string name into a key (stable across runs/hosts)."""
+    return jax.random.fold_in(k, _name_to_int(name))
+
+
+def fold(k: jax.Array, *names_or_ints) -> jax.Array:
+    for item in names_or_ints:
+        if isinstance(item, str):
+            k = fold_name(k, item)
+        else:
+            k = jax.random.fold_in(k, item)
+    return k
+
+
+def split_dict(k: jax.Array, names: list[str]) -> dict[str, jax.Array]:
+    return {n: fold_name(k, n) for n in names}
+
+
+def step_key(base_seed: int, step, name: str = "") -> jax.Array:
+    """Key for a given training step — deterministic under restart.
+
+    ``step`` may be a traced int32 (inside jit)."""
+    k = jax.random.PRNGKey(base_seed)
+    if name:
+        k = fold_name(k, name)
+    return jax.random.fold_in(k, jnp.asarray(step, dtype=jnp.uint32))

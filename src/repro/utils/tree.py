@@ -1,0 +1,97 @@
+"""Pytree utilities: parameter counting, casting, path-wise maps."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def cast(tree, dtype):
+    def _c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_c, tree)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_dot(a, b):
+    """Sum over all leaves of <a, b> (float32 accumulation)."""
+    parts = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return sum(jax.tree_util.tree_leaves(parts))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree_util.tree_leaves(tree)
+        )
+    )
+
+
+def path_map(fn, tree):
+    """tree_map where fn receives ("a/b/c", leaf)."""
+
+    def _name(path) -> str:
+        out = []
+        for p in path:
+            if hasattr(p, "key"):
+                out.append(str(p.key))
+            elif hasattr(p, "idx"):
+                out.append(str(p.idx))
+            else:
+                out.append(str(p))
+        return "/".join(out)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_name(p), x), tree)
+
+
+def named_leaves(tree) -> list[tuple[str, jax.Array]]:
+    out = []
+
+    def _collect(name, x):
+        out.append((name, x))
+        return x
+
+    path_map(_collect, tree)
+    return out
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    if len(leaves_a) != len(leaves_b):
+        return False
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+        for x, y in zip(leaves_a, leaves_b)
+    )

@@ -1,0 +1,66 @@
+"""Energy/speed model (paper §5, Eqs. 2–4, Fig. 6)."""
+
+import pytest
+
+from repro.core import energy
+
+
+def test_eq2_ops_headline():
+    cfg = energy.EnergyConfig()
+    assert energy.ops_per_second(50, 20, cfg) == pytest.approx(20e12)
+
+
+def test_energy_per_op_headline_heaters():
+    cfg = energy.EnergyConfig(trimming=False)
+    e = energy.energy_per_op(50, 20, cfg) * 1e12
+    assert e == pytest.approx(1.0, abs=0.05)  # paper: 1.0 pJ
+
+
+def test_energy_per_op_headline_trimmed():
+    cfg = energy.EnergyConfig(trimming=True)
+    e = energy.energy_per_op(50, 20, cfg) * 1e12
+    assert e == pytest.approx(0.28, abs=0.02)  # paper: 0.28 pJ
+
+
+def test_compute_density_headline():
+    cfg = energy.EnergyConfig()
+    assert energy.compute_density_tops_mm2(50, 20, cfg) == pytest.approx(5.78, abs=0.05)
+
+
+def test_laser_power_floor_regimes():
+    cfg = energy.EnergyConfig()
+    # capacitance-limited at the paper's operating point
+    shot = 2.0 ** (2 * cfg.n_bits + 1)
+    cap = cfg.c_pd * cfg.v_d / energy.ELEMENTARY_CHARGE
+    assert cap > shot
+    hi_bits = energy.EnergyConfig(n_bits=8)
+    assert energy.laser_power(50, hi_bits) > energy.laser_power(50, cfg)
+
+
+def test_fig6_energy_decreases_with_cells():
+    cfg = energy.EnergyConfig(trimming=True)
+    curve = energy.fig6_curve(cfg, cells=[100, 400, 1000, 4000, 10000])
+    es = [r["e_op_pj"] for r in curve]
+    assert all(a >= b for a, b in zip(es, es[1:]))  # monotone ↓ (Fig. 6 shape)
+
+
+def test_fig6_heater_above_trimming():
+    heat = energy.fig6_curve(energy.EnergyConfig(trimming=False), cells=[1000, 4000])
+    trim = energy.fig6_curve(energy.EnergyConfig(trimming=True), cells=[1000, 4000])
+    for h, t in zip(heat, trim):
+        assert h["e_op_pj"] > t["e_op_pj"]
+
+
+def test_optimal_dims_respect_constraint():
+    cfg = energy.EnergyConfig()
+    m, n, _ = energy.optimal_bank_dims(1000, cfg)
+    assert m * n == 1000 and m >= 5 and n >= 5
+
+
+def test_dfa_backward_cost_paper_mlp():
+    """Paper's 784×800×800×10 MLP backward on a 50×20 bank."""
+    cfg = energy.EnergyConfig()
+    r = energy.dfa_backward_cost([800, 800], 10, cfg)
+    assert r["cycles"] == 32  # 2 layers × ceil(800/50)×ceil(10/20)
+    assert r["seconds"] == pytest.approx(3.2e-9)
+    assert r["tops"] == pytest.approx(10.0)  # half the bank is idle (N=10<20)

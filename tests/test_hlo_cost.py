@@ -1,0 +1,83 @@
+"""Trip-count-aware HLO cost walker (the roofline's data source)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import hlo_cost
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops_exact():
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = hlo_cost.analyze(_compile_text(lambda a, b: a @ b, x, w))
+    assert c.flops == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_by_trip_count():
+    def loop(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = hlo_cost.analyze(_compile_text(loop, x, w))
+    assert c.flops == 10 * 2 * 128**3
+
+
+def test_nested_scan():
+    def nested(x, w):
+        def outer(co, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, co, None, length=5)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = hlo_cost.analyze(_compile_text(nested, x, w))
+    assert c.flops == 15 * 2 * 64**3
+
+
+def test_xla_cost_analysis_undercounts_loops():
+    """The reason this walker exists: XLA counts while bodies once."""
+    def loop(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    compiled = jax.jit(loop).lower(x, w).compile()
+    xla_flops = compiled.cost_analysis().get("flops", 0)
+    walker = hlo_cost.analyze(compiled.as_text()).flops
+    assert xla_flops < walker / 5  # XLA sees ~1/10 of the real flops
+
+
+def test_mem_bytes_positive_and_reasonable():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = hlo_cost.analyze(_compile_text(lambda a, b: a @ b, x, w))
+    assert c.mem_bytes >= 3 * 256 * 256 * 4  # two operands + output
+
+
+def test_collective_parse_smoke():
+    text = """
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %p = f32[8,8]{1,0} parameter(0)
+  %ag = f32[16,8]{1,0} all-gather(%p), replica_groups={{0,1}}, dimensions={0}
+  ROOT %slice.1 = f32[8,8]{1,0} slice(%ag), slice={[0:8], [0:8]}
+}
+"""
+    c = hlo_cost.analyze(text)
+    assert c.coll_bytes["all-gather"] == 8 * 8 * 4
+    assert c.coll_count["all-gather"] == 1
