@@ -1,14 +1,17 @@
 """Paper §1 claim: DFA yields performance comparable to backprop — plus the
-alignment diagnostic (ref [29]: align-then-memorise)."""
+alignment diagnostic (ref [29]: align-then-memorise).  Both algorithms are
+driven through ``repro.api.build_session`` — the same registry cells the
+trainer and launchers use."""
 
 from __future__ import annotations
 
 import jax
 
-from repro.core import dfa
+from repro import api
+from repro.algos.dfa import grad_alignment
 from repro.data import mnist, pipeline
 from repro.models.mlp import MLPClassifier
-from repro.train import SGDM, Trainer, TrainerConfig
+from repro.train import SGDM
 
 
 def run(train_n=6144, test_n=1536, steps=384, hidden=(256, 256), seed=0):
@@ -16,26 +19,25 @@ def run(train_n=6144, test_n=1536, steps=384, hidden=(256, 256), seed=0):
     xtr, ytr = data["train"]
     xte, yte = data["test"]
     rows = []
-    states = {}
+    sessions = {}
     for algo in ("dfa", "bp"):
         pipe = pipeline.ArrayClassification(xtr, ytr, batch_size=64, seed=seed)
-        model = MLPClassifier(hidden=hidden)
-        tr = Trainer(model, TrainerConfig(
-            algo=algo, optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed,
-            log_every=10**9))
-        state, _ = tr.fit(pipe.batch, total_steps=steps, verbose=False)
-        ev = tr.evaluate(state, pipe.eval_batches(xte, yte, 256))
+        session = api.build_session(
+            arch=MLPClassifier(hidden=hidden), algo=algo,
+            optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed, log_every=10**9)
+        state, _ = session.fit(pipe.batch, total_steps=steps, verbose=False)
+        ev = session.evaluate(state, pipe.eval_batches(xte, yte, 256))
         rows.append({"algo": algo, "test_accuracy": 100 * ev["accuracy"]})
-        states[algo] = (model, state)
+        sessions[algo] = (session, state)
 
     # alignment of DFA grads with BP grads at the trained point
-    model, state = states["dfa"]
-    cfg = dfa.DFAConfig()
+    session, state = sessions["dfa"]
     batch = pipe.batch(0)
-    (_, _), gd = dfa.value_and_grad(model, cfg)(
+    (_, _), gd = sessions["dfa"][0].value_and_grad()(
         state["params"], state["fb"], batch, jax.random.PRNGKey(0))
-    (_, _), gb = dfa.bp_value_and_grad(model)(state["params"], state["fb"], batch, None)
-    align = dfa.grad_alignment(gd, gb)
+    (_, _), gb = sessions["bp"][0].value_and_grad()(
+        state["params"], state["fb"], batch, None)
+    align = grad_alignment(gd, gb)
     rows.append({"algo": "alignment_h0", "test_accuracy": float(align["h0"])})
     rows.append({"algo": "alignment_h1", "test_accuracy": float(align["h1"])})
     return rows

@@ -14,10 +14,10 @@ from __future__ import annotations
 
 import argparse
 
-from repro.core import dfa, photonics
+from repro import api
 from repro.data import mnist, pipeline
 from repro.models.mlp import MLPClassifier
-from repro.train import SGDM, Trainer, TrainerConfig
+from repro.train import SGDM
 
 PAPER = {"ideal": 98.10, "offchip_bpd": 97.41, "onchip_bpd": 96.33}
 
@@ -30,14 +30,11 @@ def run(train_n=8192, test_n=2048, steps=512, hidden=(800, 800), seed=0,
     rows = []
     for preset in presets:
         pipe = pipeline.ArrayClassification(xtr, ytr, batch_size=64, seed=seed)
-        model = MLPClassifier(hidden=hidden)
-        tr = Trainer(model, TrainerConfig(
-            algo="dfa",
-            dfa=dfa.DFAConfig(photonics=photonics.preset(preset)),
-            optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed,
-            log_every=10**9))
-        state, _ = tr.fit(pipe.batch, total_steps=steps, verbose=False)
-        ev = tr.evaluate(state, pipe.eval_batches(xte, yte, 256))
+        session = api.build_session(
+            arch=MLPClassifier(hidden=hidden), algo="dfa", hardware=preset,
+            optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed, log_every=10**9)
+        state, _ = session.fit(pipe.batch, total_steps=steps, verbose=False)
+        ev = session.evaluate(state, pipe.eval_batches(xte, yte, 256))
         rows.append({
             "preset": preset, "source": data["source"],
             "test_accuracy": 100 * ev["accuracy"],

@@ -6,10 +6,11 @@ from __future__ import annotations
 
 import argparse
 
-from repro.core import dfa, photonics
+from repro import api
+from repro.core import photonics
 from repro.data import mnist, pipeline
 from repro.models.mlp import MLPClassifier
-from repro.train import SGDM, Trainer, TrainerConfig
+from repro.train import SGDM
 
 
 def run(bits_list=(2.0, 3.0, 3.31, 4.35, 6.0, 8.0), train_n=6144, test_n=1536,
@@ -21,12 +22,11 @@ def run(bits_list=(2.0, 3.0, 3.31, 4.35, 6.0, 8.0), train_n=6144, test_n=1536,
     for bits in bits_list:
         cfg = photonics.PhotonicConfig(noise_std=photonics.bits_to_std(bits))
         pipe = pipeline.ArrayClassification(xtr, ytr, batch_size=64, seed=seed)
-        model = MLPClassifier(hidden=hidden)
-        tr = Trainer(model, TrainerConfig(
-            algo="dfa", dfa=dfa.DFAConfig(photonics=cfg),
-            optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed, log_every=10**9))
-        state, _ = tr.fit(pipe.batch, total_steps=steps, verbose=False)
-        ev = tr.evaluate(state, pipe.eval_batches(xte, yte, 256))
+        session = api.build_session(
+            arch=MLPClassifier(hidden=hidden), algo="dfa", hardware=cfg,
+            optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed, log_every=10**9)
+        state, _ = session.fit(pipe.batch, total_steps=steps, verbose=False)
+        ev = session.evaluate(state, pipe.eval_batches(xte, yte, 256))
         rows.append({"bits": bits, "noise_std": cfg.noise_std,
                      "test_accuracy": 100 * ev["accuracy"]})
     return rows

@@ -11,10 +11,16 @@ its paper anchor).  Individual modules offer richer CLIs:
   python -m benchmarks.gemm_cycles        (§3 GeMM compiler)
   python -m benchmarks.dfa_vs_bp          (§1 claim)
   python -m benchmarks.roofline           (deliverable g; needs results/dryrun.json)
+
+``--smoke`` instead runs one ``repro.api.build_session(...).fit`` step for
+EVERY algorithm registered in ``repro.algos`` (mnist_mlp smoke arch) — the
+registry's rot check: a newly registered algorithm that can't complete a
+training step fails here (and in tests/test_api_smoke.py) immediately.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import time
 
@@ -137,7 +143,40 @@ TABLES = [
 ]
 
 
+def smoke() -> int:
+    """One fit step per registered algorithm through repro.api."""
+    import jax
+
+    from repro import algos, api
+
+    failures = 0
+    print("smoke: algo,us_per_call,loss")
+    for name in algos.list_algos():
+        try:
+            session = api.build_session(arch="mnist_mlp", algo=name,
+                                        smoke=True, log_every=10**9)
+            key = jax.random.PRNGKey(0)
+            batch = {
+                "x": jax.random.normal(key, (16, session.model.in_dim)),
+                "y": jax.random.randint(key, (16,), 0, session.model.n_classes),
+            }
+            us, (state, metrics) = _timed(
+                lambda: session.fit(lambda step: batch, total_steps=1,
+                                    verbose=False))
+            print(f"{name},{us:.0f},{float(metrics['loss']):.4f}", flush=True)
+        except Exception as ex:
+            failures += 1
+            print(f"{name},0,ERROR {type(ex).__name__}: {str(ex)[:120]}", flush=True)
+    return failures
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one build_session().fit step per registered algorithm")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(1 if smoke() else 0)
     print("name,us_per_call,derived")
     for name, fn in TABLES:
         try:

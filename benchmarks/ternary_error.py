@@ -8,10 +8,10 @@ off-chip-BPD photonic noise."""
 
 from __future__ import annotations
 
-from repro.core import dfa, photonics
+from repro import api
 from repro.data import mnist, pipeline
 from repro.models.mlp import MLPClassifier
-from repro.train import SGDM, Trainer, TrainerConfig
+from repro.train import SGDM
 
 
 def run(train_n=8192, test_n=2048, steps=512, hidden=(256, 256), seed=0):
@@ -21,14 +21,12 @@ def run(train_n=8192, test_n=2048, steps=512, hidden=(256, 256), seed=0):
     rows = []
     for mode in ("none", "int8", "ternary"):
         pipe = pipeline.ArrayClassification(xtr, ytr, batch_size=64, seed=seed)
-        model = MLPClassifier(hidden=hidden)
-        tr = Trainer(model, TrainerConfig(
-            algo="dfa",
-            dfa=dfa.DFAConfig(photonics=photonics.preset("offchip_bpd"),
-                              error_compress=mode),
-            optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed, log_every=10**9))
-        state, _ = tr.fit(pipe.batch, total_steps=steps, verbose=False)
-        ev = tr.evaluate(state, pipe.eval_batches(xte, yte, 256))
+        session = api.build_session(
+            arch=MLPClassifier(hidden=hidden), algo="dfa",
+            hardware="offchip_bpd", error_compress=mode,
+            optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed, log_every=10**9)
+        state, _ = session.fit(pipe.batch, total_steps=steps, verbose=False)
+        ev = session.evaluate(state, pipe.eval_batches(xte, yte, 256))
         bytes_per_err = {"none": 4.0, "int8": 1.0, "ternary": 0.25}[mode]
         rows.append({"error_compress": mode,
                      "test_accuracy": 100 * ev["accuracy"],

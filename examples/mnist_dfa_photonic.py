@@ -13,10 +13,10 @@ procedural-digit corpus the ordering and gap structure are the claim.
 
 import argparse
 
-from repro.core import dfa, photonics
+from repro import api
+from repro.core import photonics
 from repro.data import mnist, pipeline
-from repro.models.mlp import MLPClassifier
-from repro.train import SGDM, Trainer, TrainerConfig
+from repro.train import SGDM
 
 PAPER = {"ideal": 98.10, "offchip_bpd": 97.41, "onchip_bpd": 96.33}
 
@@ -37,17 +37,16 @@ def main():
     results = {}
     for preset in ["ideal", "offchip_bpd", "onchip_bpd"]:
         pipe = pipeline.ArrayClassification(xtr, ytr, batch_size=64, seed=args.seed)
-        model = MLPClassifier()  # the paper's exact architecture
-        trainer = Trainer(model, TrainerConfig(
-            algo="dfa",
-            dfa=dfa.DFAConfig(photonics=photonics.preset(preset)),
+        session = api.build_session(
+            arch="mnist_mlp",  # the paper's exact architecture
+            algo="dfa", hardware=preset,
             optimizer=SGDM(lr=0.01, momentum=0.9),  # the paper's optimizer
-            seed=args.seed, log_every=max(1, args.steps // 8)))
+            seed=args.seed, log_every=max(1, args.steps // 8))
         print(f"[train] preset={preset} "
               f"(sigma={photonics.preset(preset).noise_std}, "
               f"{photonics.preset(preset).effective_bits:.2f} bits)")
-        state, _ = trainer.fit(pipe.batch, total_steps=args.steps, verbose=True)
-        ev = trainer.evaluate(state, pipe.eval_batches(xte, yte, 256))
+        state, _ = session.fit(pipe.batch, total_steps=args.steps, verbose=True)
+        ev = session.evaluate(state, pipe.eval_batches(xte, yte, 256))
         results[preset] = 100 * ev["accuracy"]
 
     print("\npreset          test_acc%   paper%(MNIST)")

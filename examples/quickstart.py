@@ -1,45 +1,53 @@
-"""Quickstart: the paper's algorithm in six steps.
+"""Quickstart: the paper's algorithm in six steps, through ``repro.api``.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the paper's MLP, wires the photonic DFA engine with the measured
-off-chip-BPD noise, takes a few training steps, and shows the energy model.
+Builds the paper's MLP, binds one cell of the algorithm × hardware ×
+backend matrix (DFA × off-chip-BPD noise × auto backend) into a Session,
+takes a few training steps, and shows the energy model.
 """
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfa, energy, photonics
+from repro import algos, api
+from repro.core import energy
 from repro.data import mnist
-from repro.models.mlp import MLPClassifier
 
-# 1. the paper's network: 784x800x800x10 ReLU MLP
-model = MLPClassifier()
-params = model.init(jax.random.PRNGKey(0))
+# 1. one cell of the matrix: the paper's 784x800x800x10 ReLU MLP, trained
+#    with DFA on the off-chip BPD circuit (sigma=0.098 -> 4.35 bits)
+session = api.build_session(arch="mnist_mlp", algo="dfa",
+                            hardware="offchip_bpd", backend="auto")
+hw = session.config.dfa.photonics
+print(f"algorithms registered: {algos.list_algos()}")
+print(f"hardware: sigma={hw.noise_std} -> {hw.effective_bits:.2f} effective bits")
 
-# 2. the photonic hardware: off-chip BPD circuit (sigma=0.098 -> 4.35 bits)
-cfg = dfa.DFAConfig(photonics=photonics.preset("offchip_bpd"))
-print(f"hardware: sigma={cfg.photonics.noise_std} -> "
-      f"{cfg.photonics.effective_bits:.2f} effective bits")
+# 2. training state: params + the fixed random feedback B(k) inscribed on
+#    the MRR weight bank (the algorithm's extra state)
+state = session.init_state(jax.random.PRNGKey(0))
+print("feedback shapes:", {k: tuple(v.shape) for k, v in state["fb"].items()})
 
-# 3. fixed random feedback B(k) — inscribed on the MRR weight bank
-fb = dfa.init_feedback(model, jax.random.PRNGKey(7), cfg)
-print("feedback shapes:", {k: tuple(v.shape) for k, v in fb.items()})
-
-# 4. data (procedural digits unless REPRO_MNIST_DIR points at IDX files)
+# 3. data (procedural digits unless REPRO_MNIST_DIR points at IDX files)
 data = mnist.load((4096, 512))
 print("data source:", data["source"])
 xtr, ytr = data["train"]
 
-# 5. DFA training steps: delta(k) = B(k)e (+ analog noise) ⊙ local vjp
-step = jax.jit(dfa.value_and_grad(model, cfg))
+# 4. DFA training steps: delta(k) = B(k)e (+ analog noise) ⊙ local vjp —
+#    session.step is the jit'd trainer step (forward, photonic backward,
+#    SGD-momentum update)
 for i in range(20):
     batch = {"x": jnp.asarray(xtr[i * 64:(i + 1) * 64]),
              "y": jnp.asarray(ytr[i * 64:(i + 1) * 64])}
-    (loss, metrics), grads = step(params, fb, batch, jax.random.PRNGKey(i))
-    params = jax.tree_util.tree_map(lambda p, g: p - 0.01 * g, params, grads)
+    state, metrics = session.step(state, batch)
     if i % 5 == 0:
-        print(f"step {i:3d} loss={float(loss):.4f} acc={float(metrics['accuracy']):.3f}")
+        print(f"step {i:3d} loss={float(metrics['loss']):.4f} "
+              f"acc={float(metrics['accuracy']):.3f}")
+
+# 5. the raw gradient function is one call away when you need it
+#    (same registry entry the trainer uses)
+vg = session.value_and_grad()
+(loss, _), grads = vg(state["params"], state["fb"], batch, jax.random.PRNGKey(99))
+print(f"value_and_grad: loss={float(loss):.4f}, grad trees: {sorted(grads)}")
 
 # 6. what the chip would cost: the GeMM compiler's schedule on a 50x20 bank
 r = energy.dfa_backward_cost([800, 800], 10, energy.EnergyConfig())

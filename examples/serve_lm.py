@@ -5,13 +5,11 @@ model has learned the stream's successor structure.
     PYTHONPATH=src python examples/serve_lm.py
 """
 
-import jax
-
-from repro.core import dfa
+from repro import api
 from repro.data import tokens
 from repro.models.transformer import TransformerConfig, TransformerLM
 from repro.serve import Engine, Request
-from repro.train import SGDM, Trainer, TrainerConfig
+from repro.train import SGDM
 
 VOCAB = 128
 A, B = 31, 7  # the stream's successor rule: next = (A*t + B) mod V
@@ -23,11 +21,11 @@ def main():
         d_ff=512, vocab_size=VOCAB, head_dim=32))
     gen = tokens.MarkovTokens(VOCAB, seq_len=64, batch_size=16, seed=0,
                               p_follow=0.95, a=A, b=B)
-    trainer = Trainer(model, TrainerConfig(
-        algo="dfa", dfa=dfa.DFAConfig(),
-        optimizer=SGDM(lr=0.05, momentum=0.9), log_every=50))
+    session = api.build_session(
+        arch=model, algo="dfa", hardware="ideal",
+        optimizer=SGDM(lr=0.05, momentum=0.9), log_every=50)
     print("[train] 600 DFA steps on the Markov stream…")
-    state, _ = trainer.fit(gen.batch, total_steps=600)
+    state, _ = session.fit(gen.batch, total_steps=600)
 
     eng = Engine(model, state["params"], batch_slots=4, max_len=96)
     prompts = [[s, (A * s + B) % VOCAB, (A * ((A * s + B) % VOCAB) + B) % VOCAB]

@@ -13,10 +13,11 @@ import argparse
 
 import jax.numpy as jnp
 
-from repro.core import dfa, photonics
+from repro import algos, api
+from repro.core import photonics
 from repro.data import tokens
 from repro.models.transformer import TransformerConfig, TransformerLM
-from repro.train import SGDM, Trainer, TrainerConfig
+from repro.train import SGDM
 from repro.utils.tree import param_count
 
 
@@ -33,7 +34,7 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--preset", default="offchip_bpd", choices=list(photonics.PRESETS))
-    ap.add_argument("--algo", default="dfa", choices=["dfa", "bp"])
+    ap.add_argument("--algo", default="dfa", choices=algos.list_algos())
     ap.add_argument("--ckpt-dir", default="runs/lm_dfa")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -44,14 +45,13 @@ def main():
           f"algo={args.algo}, photonics={args.preset}")
 
     gen = tokens.MarkovTokens(model.cfg.vocab_size, args.seq, args.batch, args.seed)
-    trainer = Trainer(model, TrainerConfig(
-        algo=args.algo,
-        dfa=dfa.DFAConfig(photonics=photonics.preset(args.preset)),
+    session = api.build_session(
+        arch=model, algo=args.algo, hardware=args.preset,
         optimizer=SGDM(lr=0.05, momentum=0.9),
         seed=args.seed,
         ckpt_dir=args.ckpt_dir, ckpt_every=100,
-        log_every=20, log_path=f"{args.ckpt_dir}/metrics.csv"))
-    state, metrics = trainer.fit(gen.batch, total_steps=args.steps)
+        log_every=20, log_path=f"{args.ckpt_dir}/metrics.csv")
+    state, metrics = session.fit(gen.batch, total_steps=args.steps)
     print(f"[done] step={int(state['step'])} "
           f"ce={float(metrics['ce_loss']):.4f} "
           f"(vs ln(V)={jnp.log(model.cfg.vocab_size):.2f} at random)")

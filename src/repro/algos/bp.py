@@ -1,0 +1,46 @@
+"""Exact-backprop baseline under the identical harness/loss (paper §1's
+comparison partner).  Registered as ``bp``."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.algos import base
+from repro.algos import dfa as dfa_lib
+
+
+def bp_value_and_grad(model, *, aux_metrics: bool = True):
+    """Exact-backprop baseline under the identical harness/loss."""
+    del aux_metrics
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def fn(params, fb, batch, rng):
+        del fb, rng
+        (loss, metrics), grads = grad_fn(params, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return (loss, metrics), grads
+
+    return fn
+
+
+class BPAlgorithm(base.Algorithm):
+    name = "bp"
+
+    def init_extra_state(self, model, key, cfg):
+        """BP needs no feedback, but building the same matrices keeps the
+        training-state layout identical across algorithms — checkpoints can
+        be restored under a different ``algo`` and the (seed, step) RNG
+        contract is unchanged from the pre-registry trainer."""
+        return dfa_lib.init_feedback(model, key, cfg)
+
+    def value_and_grad(self, model, cfg):
+        del cfg
+        return bp_value_and_grad(model)
+
+
+base.register(BPAlgorithm())

@@ -1,0 +1,125 @@
+"""``repro.api`` — the one-call facade over the algorithm × hardware ×
+backend matrix.
+
+The paper's experiment grid is three independent axes:
+
+* **algo**     — a name in ``repro.algos`` (``bp`` | ``dfa`` | ``dfa-fused``
+  | ``dfa-layerwise`` | anything registered later)
+* **hardware** — a ``core.photonics`` preset name (``ideal`` |
+  ``single_mrr`` | ``offchip_bpd`` | ``onchip_bpd`` | ``digital``) or a
+  ``PhotonicConfig`` instance
+* **backend**  — how projections execute: ``auto`` | ``ref`` | ``pallas``
+  (or a ``PhotonicBackend`` instance)
+
+Typical use::
+
+    from repro import api
+
+    session = api.build_session(arch="mnist_mlp", algo="dfa",
+                                hardware="offchip_bpd")
+    state, metrics = session.fit(data_fn, total_steps=512)
+    session.evaluate(state, eval_batches)
+
+``arch`` is a name from ``repro.configs`` (or an already-built DFAModel
+instance).  Everything else is optional with paper-faithful defaults
+(SGD momentum 0.9, lr 0.01 — the paper's §4 optimizer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax.numpy as jnp
+
+from repro import algos, configs
+from repro.algos.dfa import DFAConfig
+from repro.core import feedback as fb_lib
+from repro.core import photonics
+from repro.train import SGDM, Trainer, TrainerConfig
+
+
+def resolve_hardware(hardware) -> photonics.PhotonicConfig:
+    """Preset name or PhotonicConfig -> PhotonicConfig."""
+    if isinstance(hardware, photonics.PhotonicConfig):
+        return hardware
+    return photonics.preset(hardware)
+
+
+def build_model(arch, *, smoke: bool = False, dtype=jnp.float32):
+    """Arch name (repro.configs) or a model instance -> DFAModel."""
+    if not isinstance(arch, str):
+        return arch  # already a model
+    a = configs.get(arch)
+    if smoke:
+        return a.make_smoke()
+    return a.make_model(dtype)
+
+
+@dataclasses.dataclass
+class Session:
+    """A bound (model, algorithm, hardware, backend) cell of the matrix."""
+
+    model: typing.Any
+    algorithm: algos.Algorithm
+    trainer: Trainer
+
+    @property
+    def config(self) -> TrainerConfig:
+        return self.trainer.cfg
+
+    # ---- training ----
+    def init_state(self, key=None):
+        return self.trainer.init_state(key)
+
+    def step(self, state, batch):
+        return self.trainer.step(state, batch)
+
+    def fit(self, data_fn, total_steps: int, eval_fn=None, verbose: bool = True):
+        return self.trainer.fit(data_fn, total_steps, eval_fn=eval_fn,
+                                verbose=verbose)
+
+    # ---- gradients / eval ----
+    def value_and_grad(self):
+        """fn(params, extra_state, batch, rng) -> ((loss, metrics), grads)."""
+        return self.algorithm.value_and_grad(self.model, self.config.dfa)
+
+    def fused_step(self, optimizer=None):
+        """Memory-optimised step (algorithm-specific; generic fallback)."""
+        return self.algorithm.fused_step(
+            self.model, self.config.dfa, optimizer or self.config.optimizer)
+
+    def evaluate(self, state, batches) -> dict:
+        return self.trainer.evaluate(state, batches)
+
+
+def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
+                  backend="auto", optimizer=None, seed: int = 0,
+                  smoke: bool = False, dtype=jnp.float32,
+                  error_compress: str = "none", freeze_norms: bool = False,
+                  feedback: fb_lib.FeedbackConfig | None = None,
+                  microbatches: int = 1, ckpt_dir: str | None = None,
+                  ckpt_every: int = 500, log_every: int = 50,
+                  log_path: str | None = None,
+                  step_deadline_s: float | None = None) -> Session:
+    """Compose one cell of the algorithm × hardware × backend matrix."""
+    model = build_model(arch, smoke=smoke, dtype=dtype)
+    algorithm = algos.get(algo)       # fail fast on unknown names
+    photonics.get_backend(backend)    # (likewise for the backend)
+    dfa_cfg = DFAConfig(
+        photonics=resolve_hardware(hardware),
+        feedback=feedback or fb_lib.FeedbackConfig(),
+        error_compress=error_compress,
+        backend=backend,
+        freeze_norms=freeze_norms,
+    )
+    cfg = TrainerConfig(
+        algo=algo, dfa=dfa_cfg,
+        optimizer=optimizer or SGDM(lr=0.01, momentum=0.9),
+        seed=seed, microbatches=microbatches,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+        log_every=log_every, log_path=log_path,
+        step_deadline_s=step_deadline_s,
+    )
+    return Session(model=model, algorithm=algorithm,
+                   trainer=Trainer(model, cfg))

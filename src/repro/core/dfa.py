@@ -1,357 +1,32 @@
-"""Direct Feedback Alignment training engine (the paper's algorithm).
+"""Compatibility alias — the DFA engine now lives in ``repro.algos``.
 
-For every block k the gradient is computed from the *output error only*
-(paper Eq. 1):   δ(k) = B(k)·e  ⊙ local-derivative, realised as
+The training algorithms were refactored into the pluggable registry
+(``repro.algos``): the Eq. 1 engine is ``algos/dfa.py`` (registered as
+``dfa`` / ``dfa-fused``), the backprop baseline is ``algos/bp.py``
+(``bp``), and the shallow ablation is ``algos/layerwise.py``
+(``dfa-layerwise``).  This module re-exports the historical
+``repro.core.dfa`` names so existing imports keep working; new code should
+go through ``repro.algos`` / ``repro.api``::
 
-    δ(k) = photonic_project(e, B(k))       # the MRR weight-bank product,
-                                           # with measured analog noise
-    grads(k) = local_vjp(block_k, x_k)(δ(k))   # exact *within* the block
-
-The per-layer loop is a ``lax.map`` with **no loop-carried dependency** —
-unlike backprop there is no sequential chain, which is the systems property
-the paper exploits (all layers updated in parallel during the backward
-pass).  The error is computed once and broadcast; under a sharded mesh this
-is ONE collective instead of backprop's L chained backward matmuls.
-
-For an MLP of DenseBlocks this reduces *exactly* to the paper's update:
-local vjp through the activation contributes the ⊙ g'(a) Hadamard, and
-grad_W = (B e ⊙ g'(a)) · h_inᵀ.
-
-Error compression (`ternary` per the paper's ref [48], or `int8`) is applied
-to e before projection/broadcast — the gradient-compression knob for
-distributed training.
+    algo = algos.get("dfa")
+    fn = algo.value_and_grad(model, cfg)          # was dfa.value_and_grad
+    fb = algo.init_extra_state(model, key, cfg)   # was dfa.init_feedback
+    session = api.build_session(arch="mnist_mlp", algo="dfa", ...)
 """
 
-from __future__ import annotations
+from repro.algos.bp import bp_value_and_grad
+from repro.algos.dfa import (
+    DFAConfig,
+    compress_error,
+    freeze_norm_leaves,
+    grad_alignment,
+    init_feedback,
+    make_fused_train_step,
+    value_and_grad,
+)
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import feedback as fb_lib
-from repro.core import photonics
-from repro.utils import prng
-
-
-@dataclasses.dataclass(frozen=True)
-class DFAConfig:
-    photonics: photonics.PhotonicConfig = dataclasses.field(
-        default_factory=lambda: photonics.PRESETS["ideal"]
-    )
-    feedback: fb_lib.FeedbackConfig = dataclasses.field(
-        default_factory=fb_lib.FeedbackConfig
-    )
-    error_compress: str = "none"  # none | ternary | int8
-    impl: str = "auto"  # photonic projection impl: auto | ref | kernel
-    sequential: bool = False  # lax.map (False: still sequential in schedule,
-    # but dependency-free; kept for clarity/ablation hooks)
-    # Freeze norm scales in DFA blocks.  The cotangent at each norm output
-    # exists ONLY to produce the norm-scale gradient (DFA discards input
-    # cotangents), yet it costs a (B,S,D) model-axis all-reduce per matmul
-    # group per layer.  Freezing norms DCEs those all-reduces (§Perf G1);
-    # norm scales stay at init (a documented training-semantics trade).
-    freeze_norms: bool = False
-
-
-_NORM_PAT = ("norm", "ln1", "ln2", "ln3", "ln_enc", "/ln/")
-
-
-def _is_norm_path(path: str) -> bool:
-    return any(p in path for p in _NORM_PAT)
-
-
-def freeze_norm_leaves(tree):
-    """stop_gradient on norm-scale leaves: their grads become zero and XLA
-    dead-code-eliminates the (B,S,D) all-reduces that fed them."""
-    from repro.utils.tree import path_map
-
-    return path_map(
-        lambda p, x: jax.lax.stop_gradient(x) if _is_norm_path(p) else x, tree)
-
-
-def compress_error(e, mode: str):
-    """Compress the error before broadcast/projection (ref [48])."""
-    if mode == "none":
-        return e
-    if mode == "ternary":
-        # sparse ternarisation: keep only errors well above the mean
-        # (swept in EXPERIMENTS.md — tau=2.0 best at 0.25 B/element;
-        # denser ternary loses more accuracy at equal steps)
-        a = jnp.abs(e)
-        tau = 2.0 * jnp.mean(a)
-        keep = a > tau
-        scale = jnp.sum(a * keep) / jnp.maximum(jnp.sum(keep), 1.0)
-        return jnp.sign(e) * keep * scale
-    if mode == "int8":
-        amax = jnp.maximum(jnp.max(jnp.abs(e)), 1e-12)
-        q = jnp.round(jnp.clip(e / amax, -1, 1) * 127.0)
-        return (q / 127.0 * amax).astype(e.dtype)
-    raise ValueError(f"unknown error_compress {mode!r}")
-
-
-def init_feedback(model, key, cfg: DFAConfig):
-    """Fixed random feedback for every segment + the embed path."""
-    d_tap = model.d_tap
-    fb = {}
-    for spec in model.segment_specs():
-        fb[spec.name] = fb_lib.make_feedback(
-            prng.fold_name(key, spec.name), spec.n_layers, spec.d_inject, d_tap,
-            cfg.feedback,
-        )
-    # embed feedback: inject at embed output (d_inject of first segment)
-    first = model.segment_specs()[0]
-    fb["embed"] = fb_lib.make_feedback(
-        prng.fold_name(key, "embed"), 1, first.d_inject, d_tap, cfg.feedback
-    )[0]
-    return fb
-
-
-def _project(e, bmat, cfg: DFAConfig, key):
-    """δ = e·Bᵀ through the photonic execution model."""
-    return photonics.photonic_project(e, bmat, cfg.photonics, key, impl=cfg.impl)
-
-
-def value_and_grad(model, cfg: DFAConfig):
-    """Returns fn(params, fb, batch, rng) -> ((loss, metrics), grads).
-
-    ``grads`` matches the structure of ``params``.  Head gradients are exact;
-    segment/embed gradients are DFA (photonic-noisy) per Eq. 1.
-    """
-    specs = model.segment_specs()
-
-    def fn(params, fb, batch, rng):
-        # ---------- forward ----------
-        has_embed_params = len(jax.tree_util.tree_leaves(params.get("embed", {}))) > 0
-        if has_embed_params:
-            x0, embed_vjp = jax.vjp(
-                lambda pe: model.embed({**params, "embed": pe}, batch),
-                params["embed"],
-            )
-        else:
-            x0 = model.embed(params, batch)
-            embed_vjp = None
-
-        x_final, saved, auxes = model.run_segments(params, x0)
-
-        logits, head_vjp = jax.vjp(
-            lambda ph, xf: model.head_logits({**params, "head": ph}, xf, batch),
-            params["head"], x_final,
-        )
-        loss, loss_vjp, metrics = jax.vjp(
-            lambda lg: model.loss_from_logits(lg, batch), logits, has_aux=True
-        )
-        (e_logits,) = loss_vjp(jnp.float32(1.0))
-        g_head, e_hidden = head_vjp(e_logits)
-
-        e_tap = e_logits if model.error_tap == "logits" else e_hidden
-        if model.error_tap == "hidden":
-            # broadcast e in the model's compute dtype (the analog encoding
-            # is <= 7 effective bits anyway — f32 error transport is waste)
-            e_tap = e_tap.astype(x_final.dtype)
-        e_tap = compress_error(e_tap, cfg.error_compress)
-        # On hardware, e is fetched from SRAM & re-encoded each cycle; it is
-        # a constant input to the backward pass — never differentiated.
-        e_tap = jax.lax.stop_gradient(e_tap)
-
-        # ---------- DFA backward (layer-parallel: no loop-carried deps) ----
-        grads = {"head": g_head}
-        for spec in specs:
-            tape: "SavedSegment" = saved[spec.name]
-            fb_seg = fb[spec.name]
-            seg_key = prng.fold_name(rng, spec.name)
-
-            e_seg = spec.adapt_error(e_tap) if spec.adapt_error else e_tap
-
-            def per_layer(xs, spec=spec, fb_seg=fb_seg, seg_key=seg_key,
-                          extras=tape.extras, e_seg=e_seg):
-                bp, xk, idx = xs
-                bmat = fb_lib.feedback_for(fb_seg, idx)
-                kk = jax.random.fold_in(seg_key, idx)
-                delta = _project(e_seg, bmat, cfg, kk)
-
-                def local(p):
-                    from repro.dist.sharding import unshard_fsdp
-
-                    if cfg.freeze_norms:
-                        p = freeze_norm_leaves(p)
-                    return spec.apply(unshard_fsdp(p), xk, extras)
-
-                (y, _aux), vjp = jax.vjp(local, bp)
-                if spec.expand_delta is not None:
-                    delta = spec.expand_delta(delta, y.shape)
-                else:
-                    delta = delta.reshape(y.shape)
-                (g,) = vjp((delta.astype(y.dtype), jnp.float32(1.0)))
-                return g
-
-            xs = (params[spec.name], tape.inputs, jnp.arange(spec.n_layers))
-            grads[spec.name] = jax.lax.map(per_layer, xs)
-
-        # ---------- embed ----------
-        if embed_vjp is not None:
-            delta0 = model.embed_feedback(
-                e_tap, fb["embed"], x0,
-                lambda e, b: _project(e, b, cfg, prng.fold_name(rng, "embed")),
-            )
-            (g_embed,) = embed_vjp(delta0)
-            grads["embed"] = g_embed
-        elif "embed" in params:
-            grads["embed"] = jax.tree_util.tree_map(jnp.zeros_like, params["embed"])
-
-        aux_total = sum(auxes.values()) if auxes else 0.0
-        total = loss + aux_total
-        metrics = dict(metrics)
-        metrics["loss"] = total
-        if auxes:
-            metrics["aux_loss"] = aux_total
-        return (total, metrics), grads
-
-    return fn
-
-
-def make_fused_train_step(model, cfg: DFAConfig, optimizer):
-    """DFA backward with the SGD-momentum update FUSED into the per-layer
-    map: each layer's gradient is consumed immediately by its parameter /
-    momentum update, so the stacked segment gradients never materialise
-    (at kimi-k2 scale that is ~8 GB/device of peak memory).  This is only
-    possible because the DFA backward has no inter-layer dependency — the
-    update can't invalidate any later backward step.
-
-    optimizer must be SGDM-shaped (lr, momentum, weight_decay fields).
-    Returns step(params, fb, opt_state, batch, rng) ->
-    (new_params, new_opt_state, loss).
-    """
-    specs = model.segment_specs()
-
-    def _upd(p, m, g, lr):
-        g32 = g.astype(jnp.float32)
-        if optimizer.weight_decay:
-            g32 = g32 + optimizer.weight_decay * p.astype(jnp.float32)
-        m_new = optimizer.momentum * m.astype(jnp.float32) + g32
-        p_new = p.astype(jnp.float32) - lr * m_new
-        return p_new.astype(p.dtype), m_new.astype(m.dtype)
-
-    def step(params, fb, opt_state, batch, rng):
-        opt_step = opt_state["step"] + 1
-        lr = optimizer.lr(opt_step) if callable(optimizer.lr) else jnp.float32(optimizer.lr)
-
-        has_embed_params = len(jax.tree_util.tree_leaves(params.get("embed", {}))) > 0
-        if has_embed_params:
-            x0, embed_vjp = jax.vjp(
-                lambda pe: model.embed({**params, "embed": pe}, batch),
-                params["embed"])
-        else:
-            x0 = model.embed(params, batch)
-            embed_vjp = None
-        x_final, saved, auxes = model.run_segments(params, x0)
-        logits, head_vjp = jax.vjp(
-            lambda ph, xf: model.head_logits({**params, "head": ph}, xf, batch),
-            params["head"], x_final)
-        loss, loss_vjp, metrics = jax.vjp(
-            lambda lg: model.loss_from_logits(lg, batch), logits, has_aux=True)
-        (e_logits,) = loss_vjp(jnp.float32(1.0))
-        g_head, e_hidden = head_vjp(e_logits)
-        e_tap = e_logits if model.error_tap == "logits" else e_hidden
-        if model.error_tap == "hidden":
-            e_tap = e_tap.astype(x_final.dtype)
-        e_tap = jax.lax.stop_gradient(compress_error(e_tap, cfg.error_compress))
-
-        new_params = dict(params)
-        new_mom = dict(opt_state["mom"])
-        for spec in specs:
-            tape = saved[spec.name]
-            fb_seg = fb[spec.name]
-            seg_key = prng.fold_name(rng, spec.name)
-
-            def per_layer(xs, spec=spec, fb_seg=fb_seg, seg_key=seg_key,
-                          extras=tape.extras):
-                bp, mom_p, xk, idx = xs
-                bmat = fb_lib.feedback_for(fb_seg, idx)
-                kk = jax.random.fold_in(seg_key, idx)
-                delta = _project(e_tap, bmat, cfg, kk)
-
-                def local(p):
-                    from repro.dist.sharding import unshard_fsdp
-
-                    if cfg.freeze_norms:
-                        p = freeze_norm_leaves(p)
-                    return spec.apply(unshard_fsdp(p), xk, extras)
-
-                (y, _aux), vjp = jax.vjp(local, bp)
-                if spec.expand_delta is not None:
-                    delta = spec.expand_delta(delta, y.shape)
-                else:
-                    delta = delta.reshape(y.shape)
-                (g,) = vjp((delta.astype(y.dtype), jnp.float32(1.0)))
-                pm = jax.tree_util.tree_map(
-                    lambda p_, m_, g_: _upd(p_, m_, g_, lr), bp, mom_p, g)
-                leaf = lambda x: isinstance(x, tuple)
-                return (jax.tree_util.tree_map(lambda t: t[0], pm, is_leaf=leaf),
-                        jax.tree_util.tree_map(lambda t: t[1], pm, is_leaf=leaf))
-
-            xs = (params[spec.name], opt_state["mom"][spec.name], tape.inputs,
-                  jnp.arange(spec.n_layers))
-            new_params[spec.name], new_mom[spec.name] = jax.lax.map(per_layer, xs)
-
-        # head (exact grads) + embed (DFA) updated out-of-loop
-        for name, g in (("head", g_head),):
-            pm = jax.tree_util.tree_map(
-                lambda p_, m_, g_: _upd(p_, m_, g_, lr),
-                params[name], opt_state["mom"][name], g)
-            leaf = lambda x: isinstance(x, tuple)
-            new_params[name] = jax.tree_util.tree_map(lambda t: t[0], pm, is_leaf=leaf)
-            new_mom[name] = jax.tree_util.tree_map(lambda t: t[1], pm, is_leaf=leaf)
-        if embed_vjp is not None:
-            delta0 = model.embed_feedback(
-                e_tap, fb["embed"], x0,
-                lambda e, b: _project(e, b, cfg, prng.fold_name(rng, "embed")))
-            (g_embed,) = embed_vjp(delta0)
-            pm = jax.tree_util.tree_map(
-                lambda p_, m_, g_: _upd(p_, m_, g_, lr),
-                params["embed"], opt_state["mom"]["embed"], g_embed)
-            leaf = lambda x: isinstance(x, tuple)
-            new_params["embed"] = jax.tree_util.tree_map(lambda t: t[0], pm, is_leaf=leaf)
-            new_mom["embed"] = jax.tree_util.tree_map(lambda t: t[1], pm, is_leaf=leaf)
-
-        aux_total = sum(auxes.values()) if auxes else 0.0
-        new_opt = {"mom": new_mom, "step": opt_step}
-        del metrics
-        return new_params, new_opt, loss + aux_total
-
-    return step
-
-
-def bp_value_and_grad(model, *, aux_metrics: bool = True):
-    """Exact-backprop baseline under the identical harness/loss."""
-
-    def loss_fn(params, batch):
-        return model.loss(params, batch)
-
-    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
-
-    def fn(params, fb, batch, rng):
-        del fb, rng
-        (loss, metrics), grads = grad_fn(params, batch)
-        metrics = dict(metrics)
-        metrics["loss"] = loss
-        return (loss, metrics), grads
-
-    return fn
-
-
-def grad_alignment(dfa_grads, bp_grads):
-    """Per-subtree cosine(DFA, BP) — the 'alignment' diagnostic (the theory
-    in the paper's ref [29] predicts this grows during the align phase)."""
-    out = {}
-    for name in dfa_grads:
-        a = dfa_grads[name]
-        b = bp_grads[name]
-        num = sum(
-            jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
-            for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
-        )
-        na = jnp.sqrt(sum(jnp.vdot(x, x) for x in map(lambda t: t.astype(jnp.float32), jax.tree_util.tree_leaves(a))))
-        nb = jnp.sqrt(sum(jnp.vdot(x, x) for x in map(lambda t: t.astype(jnp.float32), jax.tree_util.tree_leaves(b))))
-        out[name] = num / jnp.maximum(na * nb, 1e-12)
-    return out
+__all__ = [
+    "DFAConfig", "bp_value_and_grad", "compress_error", "freeze_norm_leaves",
+    "grad_alignment", "init_feedback", "make_fused_train_step",
+    "value_and_grad",
+]

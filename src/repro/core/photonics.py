@@ -39,6 +39,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.dist.sharding import annotate
+
 
 @dataclasses.dataclass(frozen=True)
 class PhotonicConfig:
@@ -116,6 +118,18 @@ def noise_sigma_total(k_dim: int, s_a, s_b, cfg: PhotonicConfig):
     return per_pass * math.sqrt(passes)
 
 
+def normalise_operands(a, b, cfg: PhotonicConfig):
+    """Encode operands into the photonic [-1, 1] range: per-tensor amplitude
+    normalisation followed by the DAC/weight fake-quant.  Shared by the
+    reference path and the Pallas wrapper (kernels/ops.py) so both see
+    identical encoding semantics.  -> (a_n, b_n, s_a, s_b)."""
+    s_a = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(a)), 1e-12))
+    s_b = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(b)), 1e-12))
+    a_n = fake_quant(a / s_a, cfg.input_bits, 1.0)
+    b_n = fake_quant(b / s_b, cfg.weight_bits, 1.0)
+    return a_n, b_n, s_a, s_b
+
+
 def photonic_matmul(a, b, cfg: PhotonicConfig, key=None, *, mask=None):
     """Noisy C = A @ Bᵀ  (the weight-bank product).  Pure-JAX reference path.
 
@@ -129,14 +143,7 @@ def photonic_matmul(a, b, cfg: PhotonicConfig, key=None, *, mask=None):
         out = jnp.einsum("...tk,mk->...tm", a, b)
         return out * mask if mask is not None else out
 
-    from repro.dist.sharding import annotate
-
-    s_a = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(a)), 1e-12))
-    s_b = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(b)), 1e-12))
-    a_n = a / s_a
-    b_n = b / s_b
-    a_n = fake_quant(a_n, cfg.input_bits, 1.0)
-    b_n = fake_quant(b_n, cfg.weight_bits, 1.0)
+    a_n, b_n, s_a, s_b = normalise_operands(a, b, cfg)
     out = jnp.einsum("...tk,mk->...tm", a_n, b_n)
     if cfg.noise_std > 0.0:
         if key is None:
@@ -151,20 +158,82 @@ def photonic_matmul(a, b, cfg: PhotonicConfig, key=None, *, mask=None):
     return out * mask if mask is not None else out
 
 
-def photonic_project(e, b, cfg: PhotonicConfig, key=None, *, mask=None, impl="auto"):
-    """DFA projection  δ = e·Bᵀ (⊙ mask)  — dispatches to the Pallas kernel
-    on TPU, the reference path elsewhere.  e: (..., d_tap), b: (d_out, d_tap).
-    """
+# ---------------------------------------------------------------------------
+# Execution backends
+# ---------------------------------------------------------------------------
+# A PhotonicBackend is *how* the weight-bank product is executed (pure-JAX
+# einsum vs the Pallas TPU kernel); PhotonicConfig is *what* hardware is
+# being modelled.  Backends are registered by name so new execution paths
+# (e.g. an interferometer-mesh simulator, a real-hardware RPC bridge) are a
+# registration, not an edit of every call site.
+
+
+class PhotonicBackend:
+    """Executes C = A @ Bᵀ (+ bank noise, ⊙ mask) with a:(T,K), b:(M,K)."""
+
+    name = "base"
+
+    def matmul(self, a, b, cfg: PhotonicConfig, key=None, *, mask=None):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend(PhotonicBackend):
+    """Pure-JAX path: total accumulated noise drawn once per output."""
+
+    name: str = "ref"
+
+    def matmul(self, a, b, cfg, key=None, *, mask=None):
+        return photonic_matmul(a, b, cfg, key=key, mask=mask)
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(PhotonicBackend):
+    """MXU-tiled Pallas kernel (kernels/ops.py): per-block noise with the
+    statistically identical variance.  ``interpret=True`` runs the kernel in
+    the Pallas interpreter (CPU-validatable)."""
+
+    name: str = "pallas"
+    interpret: bool = False
+
+    def matmul(self, a, b, cfg, key=None, *, mask=None):
+        from repro.kernels import ops as kops  # lazy: kernels import us
+
+        return kops.photonic_matmul(a, b, cfg, key=key, mask=mask,
+                                    interpret=self.interpret)
+
+
+BACKENDS: dict[str, PhotonicBackend] = {}
+
+
+def register_backend(backend: PhotonicBackend) -> PhotonicBackend:
+    BACKENDS[backend.name] = backend
+    return backend
+
+
+register_backend(ReferenceBackend())
+register_backend(PallasBackend())
+
+
+def get_backend(spec: str | PhotonicBackend = "auto") -> PhotonicBackend:
+    """Resolve a backend: an instance passes through; "auto" picks the
+    Pallas kernel on TPU and the reference path elsewhere."""
+    if isinstance(spec, PhotonicBackend):
+        return spec
+    if spec == "auto":
+        spec = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if spec not in BACKENDS:
+        raise KeyError(
+            f"unknown photonic backend {spec!r}; registered: {sorted(BACKENDS)}")
+    return BACKENDS[spec]
+
+
+def photonic_project(e, b, cfg: PhotonicConfig, key=None, *, mask=None,
+                     backend: str | PhotonicBackend = "auto"):
+    """DFA projection  δ = e·Bᵀ (⊙ mask)  through a registered backend.
+    e: (..., d_tap), b: (d_out, d_tap)."""
     lead = e.shape[:-1]
     e2 = e.reshape(-1, e.shape[-1])
     m2 = mask.reshape(-1, mask.shape[-1]) if mask is not None else None
-    use_kernel = impl == "kernel" or (
-        impl == "auto" and jax.default_backend() == "tpu"
-    )
-    if use_kernel:
-        from repro.kernels import ops as kops
-
-        out = kops.photonic_matmul(e2, b, cfg, key=key, mask=m2)
-    else:
-        out = photonic_matmul(e2, b, cfg, key=key, mask=m2)
+    out = get_backend(backend).matmul(e2, b, cfg, key=key, mask=m2)
     return out.reshape(*lead, b.shape[0])

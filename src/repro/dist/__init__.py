@@ -1,0 +1,18 @@
+from repro.dist import sharding
+from repro.dist.sharding import (
+    FSDP,
+    MODEL,
+    annotate,
+    batch_axes,
+    make_batch_shardings,
+    make_param_shardings,
+    replicated,
+    unshard_fsdp,
+    use_mesh,
+)
+
+__all__ = [
+    "sharding", "FSDP", "MODEL", "annotate", "batch_axes",
+    "make_batch_shardings", "make_param_shardings", "replicated",
+    "unshard_fsdp", "use_mesh",
+]

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.photonic_matmul import _gaussian_tile
+from repro.kernels.photonic_matmul import _CompilerParams, _gaussian_tile
 
 
 def _kernel(a_ref, b_ref, mask_ref, *rest, nk: int, noise_mode: str,
@@ -91,7 +91,9 @@ def dfa_gradient_pallas(
 
     if noise is not None:
         noise_mode = "input"
-    elif seed is not None and sigma_step > 0.0:
+    elif seed is not None:
+        # keep the prng operand/grid structure even at sigma_step == 0
+        # (zero-noise interpret validation — see photonic_matmul.py)
         noise_mode = "prng"
     else:
         noise_mode = "none"
@@ -121,7 +123,7 @@ def dfa_gradient_pallas(
         out_specs=pl.BlockSpec((block_t, block_m), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t, m), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_t, block_m), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -14,6 +14,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core import photonics
 from repro.kernels import ref as kref
 from repro.kernels.dfa_gradient import dfa_gradient_pallas
 from repro.kernels.photonic_matmul import photonic_matmul_pallas
@@ -27,16 +28,6 @@ def _pad_to(x, mult, axis):
     pad = [(0, 0)] * x.ndim
     pad[axis] = (0, rem)
     return jnp.pad(x, pad)
-
-
-def _normalise(a, b, cfg):
-    from repro.core import photonics
-
-    s_a = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(a)), 1e-12))
-    s_b = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(b)), 1e-12))
-    a_n = photonics.fake_quant(a / s_a, cfg.input_bits, 1.0)
-    b_n = photonics.fake_quant(b / s_b, cfg.weight_bits, 1.0)
-    return a_n, b_n, s_a, s_b
 
 
 @functools.partial(
@@ -56,7 +47,7 @@ def photonic_matmul(a, b, cfg, key=None, *, mask=None, noise_mode="auto",
         out = a @ b.T
         return out * mask if mask is not None else out
 
-    a_n, b_n, s_a, s_b = _normalise(a, b, cfg)
+    a_n, b_n, s_a, s_b = photonics.normalise_operands(a, b, cfg)
 
     if noise_mode == "auto":
         noise_mode = "input" if (cfg.noise_std > 0 and key is not None) else "none"
@@ -75,8 +66,6 @@ def photonic_matmul(a, b, cfg, key=None, *, mask=None, noise_mode="auto",
     elif noise_mode == "prng":
         from jax.experimental.pallas import tpu as pltpu
 
-        from repro.core import photonics
-
         nk = a_p.shape[1] // bk
         sigma_total = photonics.noise_sigma_total(k_dim, 1.0, 1.0, cfg)
         sigma_step = float(sigma_total / math.sqrt(nk))
@@ -88,7 +77,15 @@ def photonic_matmul(a, b, cfg, key=None, *, mask=None, noise_mode="auto",
         if interpret:
             # pltpu PRNG primitives need the TPU-semantics interpreter
             # (bits come back zero there — structure-only validation).
-            interpret = pltpu.InterpretParams()
+            _InterpretParams = getattr(pltpu, "InterpretParams", None)
+            if _InterpretParams is not None:
+                interpret = _InterpretParams()
+            else:
+                # jax < 0.5: the plain interpreter has no prng_seed rule.
+                # sigma_step=0 skips the PRNG ops inside the kernel while
+                # keeping the full prng-mode operand/grid structure — same
+                # zero-noise contract the TPU-semantics interpreter gives.
+                sigma_step = 0.0
 
     if mask is not None:
         m_p = _pad_to(_pad_to(mask, bt, 0), bm, 1)

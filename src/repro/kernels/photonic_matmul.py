@@ -33,6 +33,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names it TPUCompilerParams; newer releases renamed it.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _uniform_from_bits(bits):
     """uint32 -> uniform [0, 1) float32 using 24 high bits."""
@@ -121,7 +124,10 @@ def photonic_matmul_pallas(
 
     if noise is not None:
         noise_mode = "input"
-    elif seed is not None and sigma_step > 0.0:
+    elif seed is not None:
+        # prng structure (seed operand, SMEM spec, grid) is kept even at
+        # sigma_step == 0 — the kernel skips the PRNG draw but the zero-noise
+        # interpret path still validates the real operand layout
         noise_mode = "prng"
     else:
         noise_mode = "none"
@@ -150,7 +156,7 @@ def photonic_matmul_pallas(
         out_specs=pl.BlockSpec((block_t, block_m), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t, m), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_t, block_m), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -33,8 +33,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro import configs
-from repro.core import dfa as dfa_lib
+from repro import algos, configs
+from repro.algos.dfa import DFAConfig
 from repro.core import photonics
 from repro.dist import sharding
 from repro.launch import analysis
@@ -59,12 +59,12 @@ def _make_model(arch):
     return arch.make_model(jnp.bfloat16)
 
 
-def _dfa_config() -> dfa_lib.DFAConfig:
+def _dfa_config() -> DFAConfig:
     # paper-system training config: off-chip BPD noise in the feedback path
     from repro.core.feedback import FeedbackConfig
 
-    return dfa_lib.DFAConfig(
-        photonics=photonics.preset("offchip_bpd"), impl="ref",
+    return DFAConfig(
+        photonics=photonics.preset("offchip_bpd"), backend="ref",
         feedback=FeedbackConfig(dtype=jnp.bfloat16),
         # §Perf G1: norm scales frozen in the optimised variant — the
         # (B,S,D) all-reduces that exist only to feed them are DCE'd
@@ -76,7 +76,8 @@ def build_train(arch, mesh):
     model = _make_model(arch)
     cfg = _dfa_config()
     opt = SGDM(lr=0.01, momentum=0.9)
-    vg = dfa_lib.value_and_grad(model, cfg)
+    algo = algos.get("dfa")
+    vg = algo.value_and_grad(model, cfg)
     # §Perf K3: microbatch accumulation for the 1T cell — the DFA tape,
     # error tensor, logits and MoE transients all scale with the microbatch
     # (grads/optimizer state do not), trading a k× longer step for ~k× less
@@ -113,7 +114,7 @@ def build_train(arch, mesh):
     shape = configs.SHAPES["train_4k"]
     params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     fb_s = jax.eval_shape(
-        lambda k: dfa_lib.init_feedback(model, k, cfg), jax.random.PRNGKey(0)
+        lambda k: algo.init_extra_state(model, k, cfg), jax.random.PRNGKey(0)
     )
     opt_s = jax.eval_shape(opt.init, params_s)
     batch = dict(configs.token_specs(shape.global_batch, shape.seq_len))

@@ -12,7 +12,7 @@ import time
 
 import jax
 
-from repro import configs
+from repro import api, configs
 from repro.serve import Engine, Request
 
 
@@ -27,8 +27,11 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    arch = configs.get(args.arch)
-    model = arch.make_smoke()
+    # bp/digital session: serving is forward-only — the facade still owns
+    # model construction so arch plugins flow through one entry point
+    session = api.build_session(arch=args.arch, smoke=args.smoke, algo="bp",
+                                hardware="digital", seed=args.seed)
+    model = session.model
     params = model.init(jax.random.PRNGKey(args.seed))
     vocab = model.cfg.vocab_size
 

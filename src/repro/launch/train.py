@@ -1,4 +1,4 @@
-"""Training launcher.
+"""Training launcher — a thin CLI over ``repro.api.build_session``.
 
 Small-scale (this container): runs real steps on the host devices.
 
@@ -7,6 +7,12 @@ Small-scale (this container): runs real steps on the host devices.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
       --steps 100 --algo dfa
+
+``--algo`` accepts any name registered in ``repro.algos`` (bp, dfa,
+dfa-fused, dfa-layerwise, plus anything a plugin registers); ``--preset``
+is the photonic hardware model and ``--backend`` the execution path
+(ref | pallas | auto).  Adding an algorithm or backend is a registration —
+this launcher picks it up without edits.
 
 Production-scale posture: the same step function is what launch/dryrun.py
 lowers against the (pod, data, model) mesh; on a real multi-host cluster
@@ -18,13 +24,10 @@ from __future__ import annotations
 
 import argparse
 
-import jax.numpy as jnp
-
-from repro import configs
-from repro.core import dfa as dfa_lib
+from repro import algos, api, configs
 from repro.core import photonics
 from repro.data import mnist, pipeline, tokens
-from repro.train import SGDM, Trainer, TrainerConfig
+from repro.train import SGDM
 
 
 def main():
@@ -32,8 +35,9 @@ def main():
     ap.add_argument("--arch", required=True, choices=configs.list_archs())
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (full configs are dry-run-only on CPU)")
-    ap.add_argument("--algo", choices=["dfa", "bp"], default="dfa")
+    ap.add_argument("--algo", choices=algos.list_algos(), default="dfa")
     ap.add_argument("--preset", choices=list(photonics.PRESETS), default="ideal")
+    ap.add_argument("--backend", choices=["auto", *photonics.BACKENDS], default="auto")
     ap.add_argument("--error-compress", choices=["none", "ternary", "int8"], default="none")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=64)
@@ -45,18 +49,18 @@ def main():
     ap.add_argument("--log", default=None)
     args = ap.parse_args()
 
-    arch = configs.get(args.arch)
-    model = arch.make_smoke() if (args.smoke or args.arch != "mnist_mlp") else arch.make_model(jnp.float32)
-
-    cfg = TrainerConfig(
+    session = api.build_session(
+        arch=args.arch,
+        smoke=(args.smoke or args.arch != "mnist_mlp"),
         algo=args.algo,
-        dfa=dfa_lib.DFAConfig(photonics=photonics.preset(args.preset),
-                              error_compress=args.error_compress),
+        hardware=args.preset,
+        backend=args.backend,
+        error_compress=args.error_compress,
         optimizer=SGDM(lr=args.lr, momentum=args.momentum),
         seed=args.seed, ckpt_dir=args.ckpt_dir, log_path=args.log,
         log_every=max(1, args.steps // 20),
     )
-    trainer = Trainer(model, cfg)
+    model = session.model
 
     if args.arch == "mnist_mlp":
         data = mnist.load(seed=args.seed)
@@ -64,8 +68,8 @@ def main():
         xtr, ytr = data["train"]
         xte, yte = data["test"]
         pipe = pipeline.ArrayClassification(xtr, ytr, args.batch, args.seed)
-        state, _ = trainer.fit(pipe.batch, total_steps=args.steps)
-        ev = trainer.evaluate(state, pipe.eval_batches(xte, yte, 256))
+        state, _ = session.fit(pipe.batch, total_steps=args.steps)
+        ev = session.evaluate(state, pipe.eval_batches(xte, yte, 256))
         print(f"[eval] {ev}")
     else:
         vocab = model.cfg.vocab_size
@@ -88,7 +92,7 @@ def main():
                                                      v.d_vision)).astype("float32") * 0.1
             return b
 
-        state, metrics = trainer.fit(batch_fn, total_steps=args.steps)
+        state, metrics = session.fit(batch_fn, total_steps=args.steps)
         print(f"[final] {({k: float(v) for k, v in metrics.items()})}")
 
 

@@ -17,6 +17,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.dist.sharding import annotate
 from repro.nn.linear import GatedMLP, Linear
 from repro.nn.module import Module, named_key, stack_init
 
@@ -111,8 +112,6 @@ class MoE(Module):
         """Route+compute one token group. x_flat: (Tg, d) -> (y, aux)."""
         if self.dispatch == "gather":
             return self._group_forward_gather(params, x_flat)
-        from repro.dist.sharding import annotate
-
         combine, dispatch, aux = self._route(params, x_flat)
         # dispatch tokens into per-expert buffers: (E, C, d)
         expert_in = jnp.einsum("tec,td->ecd", dispatch.astype(x_flat.dtype), x_flat)
@@ -128,8 +127,6 @@ class MoE(Module):
         token rows, run experts, gather slot outputs back per (token, k).
         Identical routing/capacity semantics to the einsum path with zero
         routing matmul flops."""
-        from repro.dist.sharding import annotate
-
         t, d = x_flat.shape
         e = self.n_experts
         topv, topi, keep, pos, cap, aux = self._route_topk(params, x_flat)

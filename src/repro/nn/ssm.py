@@ -130,8 +130,11 @@ class Mamba2Block(Module):
         # --- intra-chunk (quadratic within chunk) ---
         # decay(t,i) = exp(cum_t - cum_i) for i<=t
         diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,q_t,q_i,H)
-        tri = jnp.tril(jnp.ones((q, q), bool))
-        dec = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+        tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+        # exp only at masked-safe values: above the diagonal diff > 0 can
+        # overflow to inf, and where(tri, exp(diff), 0)'s vjp would then be
+        # 0 * inf = NaN for every upstream parameter
+        dec = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
         scores = jnp.einsum("bcthn,bcihn->bctih", cc, bc) * dec.transpose(0, 1, 2, 3, 4)
         y_intra = jnp.einsum("bctih,bcihp->bcthp", scores, dtxc)
         # --- chunk states ---

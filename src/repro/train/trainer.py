@@ -1,4 +1,5 @@
-"""Trainer: jit'd train step (DFA or BP), microbatch accumulation,
+"""Trainer: jit'd train step (any algorithm registered in repro.algos:
+bp, dfa, dfa-fused, dfa-layerwise, ...), microbatch accumulation,
 fault-tolerant fit loop with checkpoint/auto-resume, straggler deadline
 hooks, and CSV metric logging.
 
@@ -17,7 +18,8 @@ import typing
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfa as dfa_lib
+from repro import algos
+from repro.algos.dfa import DFAConfig
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import SGDM
 from repro.utils import prng
@@ -25,8 +27,8 @@ from repro.utils import prng
 
 @dataclasses.dataclass(frozen=True)
 class TrainerConfig:
-    algo: str = "dfa"  # dfa | bp
-    dfa: dfa_lib.DFAConfig = dataclasses.field(default_factory=dfa_lib.DFAConfig)
+    algo: str = "dfa"  # any name in algos.list_algos()
+    dfa: DFAConfig = dataclasses.field(default_factory=DFAConfig)
     optimizer: typing.Any = dataclasses.field(default_factory=SGDM)
     seed: int = 0
     microbatches: int = 1
@@ -45,12 +47,8 @@ class Trainer:
     def __init__(self, model, cfg: TrainerConfig):
         self.model = model
         self.cfg = cfg
-        if cfg.algo == "dfa":
-            self._vg = dfa_lib.value_and_grad(model, cfg.dfa)
-        elif cfg.algo == "bp":
-            self._vg = dfa_lib.bp_value_and_grad(model)
-        else:
-            raise ValueError(cfg.algo)
+        self.algorithm = algos.get(cfg.algo)
+        self._vg = self.algorithm.value_and_grad(model, cfg.dfa)
         self._step_fn = jax.jit(self._train_step)
         self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.keep_ckpts) if cfg.ckpt_dir else None
         self._log_file = None
@@ -59,7 +57,8 @@ class Trainer:
     def init_state(self, key=None):
         key = key if key is not None else prng.key(self.cfg.seed)
         params = self.model.init(key)
-        fb = dfa_lib.init_feedback(self.model, prng.fold_name(key, "feedback"), self.cfg.dfa)
+        fb = self.algorithm.init_extra_state(
+            self.model, prng.fold_name(key, "feedback"), self.cfg.dfa)
         opt_state = self.cfg.optimizer.init(params)
         return {"params": params, "fb": fb, "opt": opt_state,
                 "step": jnp.zeros((), jnp.int32)}

@@ -46,17 +46,18 @@ _SUBPROC = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp
-    from repro import configs
-    from repro.core import dfa
+    from repro import algos, configs
+    from repro.algos.dfa import DFAConfig
     from repro.dist import sharding
     from repro.train.optimizer import SGDM
 
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     arch = configs.get("qwen3-1.7b")
     model = arch.make_smoke()
-    cfg = dfa.DFAConfig()
+    cfg = DFAConfig()
     opt = SGDM(lr=0.01)
-    vg = dfa.value_and_grad(model, cfg)
+    algo = algos.get("dfa")
+    vg = algo.value_and_grad(model, cfg)
 
     def train_step(params, fb, opt_state, batch, seed):
         rng = jax.random.PRNGKey(seed)
@@ -65,7 +66,7 @@ _SUBPROC = textwrap.dedent("""
         return new_p, new_o, loss
 
     params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    fb_s = jax.eval_shape(lambda k: dfa.init_feedback(model, k, cfg), jax.random.PRNGKey(0))
+    fb_s = jax.eval_shape(lambda k: algo.init_extra_state(model, k, cfg), jax.random.PRNGKey(0))
     opt_s = jax.eval_shape(opt.init, params_s)
     batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
              "labels": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
@@ -80,6 +81,8 @@ _SUBPROC = textwrap.dedent("""
         compiled = fn.lower(params_s, fb_s, opt_s, batch,
                             jax.ShapeDtypeStruct((), jnp.int32)).compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     print(json.dumps({"ok": True, "flops": float(ca.get("flops", 0))}))
 """)
 
