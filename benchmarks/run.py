@@ -16,6 +16,12 @@ its paper anchor).  Individual modules offer richer CLIs:
 EVERY algorithm registered in ``repro.algos`` (mnist_mlp smoke arch) — the
 registry's rot check: a newly registered algorithm that can't complete a
 training step fails here (and in tests/test_api_smoke.py) immediately.
+Exit code is the gate: nonzero when any algorithm's fit step fails.
+
+``--bench`` measures training throughput (repro.bench.StepTimer over a
+data-parallel ``Session.fit``) and writes ``BENCH_train_throughput.json``;
+combined with ``--smoke`` it also writes ``BENCH_smoke.json``.  CI archives
+the ``BENCH_*.json`` files — they are the repo's perf trajectory.
 """
 
 from __future__ import annotations
@@ -143,13 +149,16 @@ TABLES = [
 ]
 
 
-def smoke() -> int:
-    """One fit step per registered algorithm through repro.api."""
+def smoke(bench_dir: str | None = None) -> int:
+    """One fit step per registered algorithm through repro.api; returns the
+    number of failing algorithms (the CLI exit code — CI gates on it).
+    With ``bench_dir`` the per-algorithm timings land in BENCH_smoke.json."""
     import jax
 
     from repro import algos, api
 
     failures = 0
+    rows = []
     print("smoke: algo,us_per_call,loss")
     for name in algos.list_algos():
         try:
@@ -163,20 +172,75 @@ def smoke() -> int:
             us, (state, metrics) = _timed(
                 lambda: session.fit(lambda step: batch, total_steps=1,
                                     verbose=False))
-            print(f"{name},{us:.0f},{float(metrics['loss']):.4f}", flush=True)
+            loss = float(metrics["loss"])
+            rows.append({"algo": name, "us_per_fit_step": us, "loss": loss})
+            print(f"{name},{us:.0f},{loss:.4f}", flush=True)
         except Exception as ex:
             failures += 1
+            rows.append({"algo": name, "error": f"{type(ex).__name__}: {str(ex)[:200]}"})
             print(f"{name},0,ERROR {type(ex).__name__}: {str(ex)[:120]}", flush=True)
+    if bench_dir is not None:
+        from repro.bench import write_bench
+
+        ok = [r for r in rows if "error" not in r]
+        path = write_bench(
+            "smoke",
+            {"algorithms": len(rows), "failures": failures,
+             "mean_us_per_fit_step":
+                 sum(r["us_per_fit_step"] for r in ok) / max(len(ok), 1)},
+            meta={"rows": rows}, out_dir=bench_dir)
+        print(f"[bench] wrote {path}", flush=True)
     return failures
+
+
+def bench_throughput(out_dir: str = ".", steps: int = 32, batch: int = 256,
+                     algo: str = "dfa", arch: str = "mnist_mlp") -> str:
+    """Measure data-parallel training throughput and write
+    BENCH_train_throughput.json (steps/s, examples/s, model MACs/s)."""
+    import numpy as np
+
+    from repro import api
+    from repro.bench import StepTimer, clamped_warmup, report_throughput
+    from repro.data import pipeline
+
+    session = api.build_session(arch=arch, algo=algo, smoke=True,
+                                log_every=10**9)
+    rng = np.random.default_rng(0)
+    n = batch * 4
+    x = rng.normal(size=(n, session.model.in_dim)).astype("float32")
+    y = rng.integers(0, session.model.n_classes, size=(n,)).astype("int32")
+    pipe = pipeline.ArrayClassification(x, y, batch_size=batch, seed=0)
+    timer = StepTimer(warmup=clamped_warmup(steps, max(2, steps // 8)))
+    state, _ = session.fit(pipe.batch, total_steps=steps, verbose=False,
+                           timer=timer)
+    path, _summary = report_throughput(
+        session, state, pipe.batch(0), timer,
+        meta={"arch": arch, "algo": algo, "batch": batch, "steps": steps},
+        out_dir=out_dir)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one build_session().fit step per registered algorithm")
+    ap.add_argument("--bench", action="store_true",
+                    help="record BENCH_*.json throughput telemetry")
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory for BENCH_*.json output")
+    ap.add_argument("--bench-steps", type=int, default=32)
+    ap.add_argument("--bench-batch", type=int, default=256)
+    ap.add_argument("--bench-algo", default="dfa")
     args = ap.parse_args()
     if args.smoke:
-        raise SystemExit(1 if smoke() else 0)
+        failures = smoke(bench_dir=args.bench_dir if args.bench else None)
+        if failures or not args.bench:
+            raise SystemExit(min(failures, 1))
+        # --smoke --bench: smoke passed — continue to the throughput bench
+    if args.bench:
+        bench_throughput(out_dir=args.bench_dir, steps=args.bench_steps,
+                         batch=args.bench_batch, algo=args.bench_algo)
+        return
     print("name,us_per_call,derived")
     for name, fn in TABLES:
         try:

@@ -75,9 +75,22 @@ class Session:
     def step(self, state, batch):
         return self.trainer.step(state, batch)
 
-    def fit(self, data_fn, total_steps: int, eval_fn=None, verbose: bool = True):
+    def fit(self, data_fn, total_steps: int, eval_fn=None, verbose: bool = True,
+            timer=None):
+        """Run the training loop; under ``data_parallel`` the batch dim is
+        sharded across all local devices (see train.Trainer).  ``timer`` is
+        an optional ``repro.bench.StepTimer`` for throughput telemetry."""
         return self.trainer.fit(data_fn, total_steps, eval_fn=eval_fn,
-                                verbose=verbose)
+                                verbose=verbose, timer=timer)
+
+    @property
+    def mesh(self):
+        """The active data-parallel mesh (None on the single-device path)."""
+        return self.trainer.mesh
+
+    def step_cost(self, state, batch):
+        """Per-device HLO cost of one train step (utils.hlo_cost)."""
+        return self.trainer.step_cost(state, batch)
 
     # ---- gradients / eval ----
     def value_and_grad(self):
@@ -98,7 +111,9 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
                   smoke: bool = False, dtype=jnp.float32,
                   error_compress: str = "none", freeze_norms: bool = False,
                   feedback: fb_lib.FeedbackConfig | None = None,
-                  microbatches: int = 1, ckpt_dir: str | None = None,
+                  microbatches: int = 1,
+                  data_parallel: bool | str = "auto", prefetch: int = 2,
+                  ckpt_dir: str | None = None,
                   ckpt_every: int = 500, log_every: int = 50,
                   log_path: str | None = None,
                   step_deadline_s: float | None = None) -> Session:
@@ -117,6 +132,7 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
         algo=algo, dfa=dfa_cfg,
         optimizer=optimizer or SGDM(lr=0.01, momentum=0.9),
         seed=seed, microbatches=microbatches,
+        data_parallel=data_parallel, prefetch=prefetch,
         ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
         log_every=log_every, log_path=log_path,
         step_deadline_s=step_deadline_s,

@@ -1,0 +1,11 @@
+"""repro.bench — throughput telemetry (StepTimer) and the BENCH_*.json
+perf-trajectory format that benchmarks/run.py emits and CI archives."""
+
+from repro.bench.report import (SCHEMA, bench_path, clamped_warmup,
+                                load_bench, make_report, report_throughput,
+                                validate, write_bench)
+from repro.bench.telemetry import StepTimer
+
+__all__ = ["SCHEMA", "StepTimer", "bench_path", "clamped_warmup",
+           "load_bench", "make_report", "report_throughput", "validate",
+           "write_bench"]

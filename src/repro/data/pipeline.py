@@ -34,3 +34,42 @@ class ArrayClassification:
         bs = batch_size or self.bs
         for i in range(0, len(x) - bs + 1, bs):
             yield {"x": x[i : i + bs], "y": y[i : i + bs]}
+
+
+class DevicePrefetcher:
+    """Double-buffered host→device feeder over a ``data_fn(step) -> batch``.
+
+    Keeps up to ``depth`` future batches (beyond the current one) already
+    enqueued through ``put_fn`` (default ``jax.device_put``, whose dispatch
+    is async): the transfer for step k+1 overlaps the compute of step k,
+    taking input feeding off the training hot path; ``depth=1`` is the
+    minimum lookahead.  Stateless with respect to the stream itself —
+    ``data_fn`` stays a pure function of step, so crash+restore replays
+    identically and a restart at step k just refills the buffer."""
+
+    def __init__(self, data_fn, put_fn=None, depth: int = 2,
+                 limit: int | None = None):
+        if put_fn is None:
+            import jax
+
+            put_fn = jax.device_put
+        self.data_fn = data_fn
+        self.put = put_fn
+        self.depth = max(1, int(depth))
+        self.limit = limit  # first step NOT to enqueue (fit's total_steps)
+        self._buf: dict = {}
+
+    def _enqueue(self, step: int) -> None:
+        if step not in self._buf:
+            self._buf[step] = self.put(self.data_fn(step))
+
+    def __call__(self, step: int):
+        self._enqueue(step)
+        for k in range(step + 1, step + self.depth + 1):
+            if self.limit is not None and k >= self.limit:
+                break
+            self._enqueue(k)
+        batch = self._buf.pop(step)
+        for k in [k for k in self._buf if k <= step]:  # restart / seek
+            del self._buf[k]
+        return batch

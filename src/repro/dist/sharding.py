@@ -158,6 +158,21 @@ def replicated(mesh):
     return NamedSharding(mesh, P())
 
 
+def replicate(mesh, tree):
+    """device_put every leaf of ``tree`` fully replicated over ``mesh`` —
+    the parameter/optimizer placement for pure data-parallel training."""
+    return jax.device_put(tree, replicated(mesh))
+
+
+def put_batch(mesh, batch):
+    """Host→device transfer of one batch, dim 0 split over the data axes
+    (``make_batch_shardings`` falls back to replication when the batch size
+    does not divide the axis).  ``jax.device_put`` dispatch is async, so the
+    Trainer's prefetcher uses this to overlap the next batch's transfer with
+    the current step's compute."""
+    return jax.device_put(batch, make_batch_shardings(mesh, batch))
+
+
 # ---------------------------------------------------------------------------
 # activation annotations
 # ---------------------------------------------------------------------------

@@ -26,7 +26,6 @@ Accumulation is f32 in a VMEM scratch tile regardless of operand dtype.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -31,3 +31,14 @@ def make_host_mesh(n_devices: int | None = None, model_axis: int = 1):
     n = len(devs)
     data = n // model_axis
     return jax.make_mesh((data, model_axis), ("data", "model"), devices=devs[: data * model_axis])
+
+
+def make_data_mesh(n_devices: int | None = None):
+    """Pure data-parallel mesh: every local device on the ``data`` axis and a
+    size-1 ``model`` axis so the dist.sharding placement rules still resolve.
+
+    This is the mesh the Trainer activates for data-parallel ``fit``:
+    parameters are replicated, only the batch dim is split, and XLA's SPMD
+    partitioner inserts the mean all-reduce over per-shard gradients."""
+    devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
+    return jax.make_mesh((len(devs), 1), ("data", "model"), devices=devs)

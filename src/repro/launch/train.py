@@ -47,6 +47,15 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log", default=None)
+    ap.add_argument("--data-parallel", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="shard the batch dim across all local devices "
+                         "(auto: whenever >1 device exists)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="host->device input pipeline depth (0 disables)")
+    ap.add_argument("--bench-json", default=None, metavar="DIR",
+                    help="measure throughput and write "
+                         "BENCH_train_throughput.json into DIR")
     args = ap.parse_args()
 
     session = api.build_session(
@@ -59,8 +68,18 @@ def main():
         optimizer=SGDM(lr=args.lr, momentum=args.momentum),
         seed=args.seed, ckpt_dir=args.ckpt_dir, log_path=args.log,
         log_every=max(1, args.steps // 20),
+        data_parallel={"auto": "auto", "on": True, "off": False}[args.data_parallel],
+        prefetch=args.prefetch,
     )
     model = session.model
+    if session.mesh is not None:
+        print(f"[dist] data-parallel over {session.mesh.devices.size} devices")
+
+    timer = None
+    if args.bench_json is not None:
+        from repro.bench import StepTimer, clamped_warmup
+
+        timer = StepTimer(warmup=clamped_warmup(args.steps, 4))
 
     if args.arch == "mnist_mlp":
         data = mnist.load(seed=args.seed)
@@ -68,7 +87,8 @@ def main():
         xtr, ytr = data["train"]
         xte, yte = data["test"]
         pipe = pipeline.ArrayClassification(xtr, ytr, args.batch, args.seed)
-        state, _ = session.fit(pipe.batch, total_steps=args.steps)
+        state, _ = session.fit(pipe.batch, total_steps=args.steps, timer=timer)
+        _report_bench(args, session, state, pipe.batch(0), timer)
         ev = session.evaluate(state, pipe.eval_batches(xte, yte, 256))
         print(f"[eval] {ev}")
     else:
@@ -92,8 +112,26 @@ def main():
                                                      v.d_vision)).astype("float32") * 0.1
             return b
 
-        state, metrics = session.fit(batch_fn, total_steps=args.steps)
+        state, metrics = session.fit(batch_fn, total_steps=args.steps, timer=timer)
+        _report_bench(args, session, state, batch_fn(0), timer)
         print(f"[final] {({k: float(v) for k, v in metrics.items()})}")
+
+
+def _report_bench(args, session, state, batch, timer):
+    if timer is None:
+        return
+    if timer.recorded_steps == 0:
+        # e.g. a checkpoint-restored fit that had nothing left to run
+        print("[bench] no steps executed — skipping throughput report",
+              flush=True)
+        return
+    from repro.bench import report_throughput
+
+    report_throughput(
+        session, state, batch, timer,
+        meta={"arch": args.arch, "algo": args.algo, "preset": args.preset,
+              "batch": args.batch, "steps": args.steps},
+        out_dir=args.bench_json)
 
 
 if __name__ == "__main__":

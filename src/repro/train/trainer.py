@@ -1,7 +1,19 @@
 """Trainer: jit'd train step (any algorithm registered in repro.algos:
 bp, dfa, dfa-fused, dfa-layerwise, ...), microbatch accumulation,
-fault-tolerant fit loop with checkpoint/auto-resume, straggler deadline
-hooks, and CSV metric logging.
+data-parallel batch sharding over the local device mesh, fault-tolerant
+fit loop with checkpoint/auto-resume, straggler deadline hooks, CSV
+metric logging, and optional throughput telemetry (repro.bench).
+
+Data-parallel contract: with ``data_parallel`` on (default "auto": enabled
+whenever more than one local device exists) the Trainer builds a 1-D data
+mesh (launch/mesh.make_data_mesh), replicates the carried state, shards the
+batch dim via dist.sharding.make_batch_shardings, and jits the fit step with
+the carried state donated.  DFA's feedback projection is per-example, so the
+only cross-device communication is the mean all-reduce over per-shard
+gradients that the SPMD partitioner inserts — numerics match single-device
+training up to float reduction order (tests/test_data_parallel.py).
+Microbatch accumulation composes: the global batch is split over devices
+first, microbatches second.
 
 Fault-tolerance contract: all training randomness (photonic noise, data
 order) is a pure function of (seed, step), so `restore()` + `fit()` replays
@@ -10,6 +22,7 @@ identically after a crash — verified by tests/test_checkpoint.py.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import time
@@ -20,6 +33,8 @@ import jax.numpy as jnp
 
 from repro import algos
 from repro.algos.dfa import DFAConfig
+from repro.data.pipeline import DevicePrefetcher
+from repro.dist import sharding
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import SGDM
 from repro.utils import prng
@@ -32,6 +47,12 @@ class TrainerConfig:
     optimizer: typing.Any = dataclasses.field(default_factory=SGDM)
     seed: int = 0
     microbatches: int = 1
+    # data-parallel scale-out: "auto" shards the batch over all local
+    # devices when more than one exists; True forces a mesh (even of one
+    # device); False keeps the original single-device path bit-for-bit.
+    data_parallel: bool | str = "auto"
+    # host->device pipeline depth for fit's input feeding (0 disables).
+    prefetch: int = 2
     ckpt_dir: str | None = None
     ckpt_every: int = 500
     keep_ckpts: int = 3
@@ -43,15 +64,43 @@ class TrainerConfig:
     step_deadline_s: float | None = None
 
 
+def _resolve_data_parallel(flag) -> bool:
+    if isinstance(flag, str):
+        if flag == "auto":
+            return jax.local_device_count() > 1
+        if flag in ("on", "true"):
+            return True
+        if flag in ("off", "false"):
+            return False
+        raise ValueError(
+            "data_parallel must be a bool, 'auto', 'on', or 'off'; "
+            f"got {flag!r}")
+    return bool(flag)
+
+
 class Trainer:
     def __init__(self, model, cfg: TrainerConfig):
         self.model = model
         self.cfg = cfg
         self.algorithm = algos.get(cfg.algo)
         self._vg = self.algorithm.value_and_grad(model, cfg.dfa)
+        self.mesh = None
+        if _resolve_data_parallel(cfg.data_parallel):
+            from repro.launch.mesh import make_data_mesh
+
+            self.mesh = make_data_mesh()
+        # step() keeps a non-donating jit — callers re-use the state they
+        # pass in (metrics probes, tests); fit() owns its carried state and
+        # donates it so XLA updates parameters in place.
         self._step_fn = jax.jit(self._train_step)
+        self._fit_step_fn = jax.jit(self._train_step, donate_argnums=(0,))
         self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.keep_ckpts) if cfg.ckpt_dir else None
         self._log_file = None
+
+    def _mesh_ctx(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return sharding.use_mesh(self.mesh)
 
     # ---------- state ----------
     def init_state(self, key=None):
@@ -104,9 +153,10 @@ class Trainer:
                      "step": state["step"] + 1}
         return new_state, metrics
 
-    def step(self, state, batch):
+    def _dispatch(self, state, batch, step_fn):
         t0 = time.monotonic()
-        state, metrics = self._step_fn(state, batch)
+        with self._mesh_ctx():
+            state, metrics = step_fn(state, batch)
         if self.cfg.step_deadline_s is not None:
             jax.block_until_ready(state["step"])
             dt = time.monotonic() - t0
@@ -115,6 +165,25 @@ class Trainer:
                     f"step {int(state['step'])} exceeded deadline "
                     f"({dt:.1f}s > {self.cfg.step_deadline_s}s) — straggler")
         return state, metrics
+
+    def step(self, state, batch):
+        if self.mesh is not None:
+            batch = sharding.put_batch(self.mesh, batch)
+        return self._dispatch(state, batch, self._step_fn)
+
+    # ---------- cost model ----------
+    def step_cost(self, state, batch):
+        """Trip-count-aware HLO cost of one train step (utils.hlo_cost):
+        PER-DEVICE flops / HBM-proxy bytes / collective bytes of the
+        optimized, post-SPMD module.  Feeds the bench MACs/s metric."""
+        from repro.utils import hlo_cost
+
+        if self.mesh is not None:
+            state = sharding.replicate(self.mesh, state)
+            batch = sharding.put_batch(self.mesh, batch)
+        with self._mesh_ctx():
+            compiled = self._step_fn.lower(state, batch).compile()
+        return hlo_cost.analyze(compiled.as_text())
 
     # ---------- loop ----------
     def restore_or_init(self, key=None):
@@ -139,13 +208,42 @@ class Trainer:
             f"{step}," + ",".join(str(row[k]) for k in sorted(row)) + "\n")
         self._log_file.flush()
 
-    def fit(self, data_fn, total_steps: int, eval_fn=None, verbose=True):
-        """data_fn(step) -> batch (deterministic — restart-safe)."""
+    def _make_feed(self, data_fn, total_steps: int):
+        """Wrap data_fn with the device-put (sharded under a mesh) and the
+        double-buffered prefetcher so fit's input feeding is off-path."""
+        if self.mesh is not None:
+            put = lambda batch: sharding.put_batch(self.mesh, batch)  # noqa: E731
+        else:
+            put = jax.device_put
+        if self.cfg.prefetch <= 0:
+            return lambda step: put(data_fn(step))
+        return DevicePrefetcher(data_fn, put_fn=put, depth=self.cfg.prefetch,
+                                limit=total_steps)
+
+    def fit(self, data_fn, total_steps: int, eval_fn=None, verbose=True,
+            timer=None):
+        """data_fn(step) -> batch (deterministic — restart-safe).
+
+        ``timer`` is an optional repro.bench.StepTimer; when given, each
+        step is synced (block_until_ready) and its wall time recorded —
+        bench-only, since the sync serializes dispatch.
+        """
         state, start = self.restore_or_init()
+        if self.mesh is not None:
+            state = sharding.replicate(self.mesh, state)
+        feed = self._make_feed(data_fn, total_steps)
         metrics = {}
+        if timer is not None:
+            timer.start()
         for step in range(start, total_steps):
-            batch = data_fn(step)
-            state, metrics = self.step(state, batch)
+            batch = feed(step)
+            if timer is not None and timer.examples_per_step is None:
+                leaves = jax.tree_util.tree_leaves(batch)
+                if leaves and getattr(leaves[0], "ndim", 0) >= 1:
+                    timer.examples_per_step = int(leaves[0].shape[0])
+            state, metrics = self._dispatch(state, batch, self._fit_step_fn)
+            if timer is not None:
+                timer.tick(state["step"])
             if (step + 1) % self.cfg.log_every == 0 or step + 1 == total_steps:
                 m = {k: float(v) for k, v in metrics.items()}
                 self._log(step + 1, metrics)
@@ -166,7 +264,10 @@ class Trainer:
         total = {}
         n = 0
         for batch in batches:
-            _, metrics = loss_fn(state["params"], batch)
+            if self.mesh is not None:
+                batch = sharding.put_batch(self.mesh, batch)
+            with self._mesh_ctx():
+                _, metrics = loss_fn(state["params"], batch)
             for k, v in metrics.items():
                 total[k] = total.get(k, 0.0) + float(v)
             n += 1

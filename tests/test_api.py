@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro import algos, api
-from repro.algos.dfa import DFAConfig, grad_alignment
+from repro.algos.dfa import grad_alignment
 from repro.core import photonics
 
 

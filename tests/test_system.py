@@ -1,9 +1,7 @@
 """End-to-end behaviour tests for the paper's system: the full photonic-DFA
 pipeline (train with measured hardware noise → evaluate → serve)."""
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import pytest
 
 from repro import configs
 from repro.core import dfa, energy, photonics
@@ -12,6 +10,7 @@ from repro.models.mlp import MLPClassifier
 from repro.train import SGDM, Trainer, TrainerConfig
 
 
+@pytest.mark.slow
 def test_paper_pipeline_end_to_end(tmp_path):
     """The paper's experiment at reduced scale: train the MLP with off-chip
     BPD noise injected into every B(k)e product, checkpoint, resume, eval."""
@@ -32,6 +31,7 @@ def test_paper_pipeline_end_to_end(tmp_path):
     assert tr.ckpt.latest_step() == 128
 
 
+@pytest.mark.slow
 def test_lm_dfa_reduces_loss_on_markov_stream():
     """A reduced LM (qwen-family smoke) learns the synthetic successor
     structure with DFA — the 'beyond-paper' training path."""
@@ -46,6 +46,7 @@ def test_lm_dfa_reduces_loss_on_markov_stream():
     assert float(m1["ce_loss"]) < float(m0["ce_loss"])
 
 
+@pytest.mark.slow
 def test_dfa_vs_bp_comparable_at_small_scale():
     """Paper §1: DFA yields performance comparable to backprop."""
     data = mnist.load((1024, 256), seed=1)

@@ -60,6 +60,7 @@ def digits():
     return data
 
 
+@pytest.mark.slow
 def test_dfa_training_improves_accuracy(digits):
     xtr, ytr = digits["train"]
     xte, yte = digits["test"]
@@ -72,6 +73,7 @@ def test_dfa_training_improves_accuracy(digits):
     assert ev["accuracy"] > 0.6  # far above 10% chance after 3 epochs
 
 
+@pytest.mark.slow
 def test_noise_robustness_ordering(digits):
     """Paper Fig. 5: clean >= off-chip-BPD >= on-chip-BPD (with slack for
     short-run variance)."""
@@ -90,6 +92,7 @@ def test_noise_robustness_ordering(digits):
     assert accs["onchip_bpd"] > 0.5  # noisy hardware still trains
 
 
+@pytest.mark.slow
 def test_bp_baseline_trains(digits):
     xtr, ytr = digits["train"]
     pipe = pipeline.ArrayClassification(xtr, ytr, batch_size=64, seed=0)
