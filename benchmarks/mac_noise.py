@@ -30,7 +30,8 @@ def run(n: int = 3900, seed: int = 0):
         outs = photonics.photonic_matmul(a, b, cfg, key=kn)
         err = np.asarray(outs - a @ b.T).ravel()
         meas_std = float(err.std())
-        meas_bits = photonics.std_to_bits(meas_std / float(jnp.max(jnp.abs(a)) * jnp.max(jnp.abs(b))))
+        scale = float(jnp.max(jnp.abs(a)) * jnp.max(jnp.abs(b)))
+        meas_bits = photonics.std_to_bits(meas_std / scale)
         rows.append({
             "preset": preset, "paper_sigma": sigma, "paper_bits": bits,
             "measured_sigma": meas_std, "measured_bits": meas_bits,

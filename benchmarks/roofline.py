@@ -64,7 +64,8 @@ def memory_floor_bytes(rec: dict) -> float:
         return p_dev + 2 * L * act_dev + logits
     # decode: params read once per token + cache read; active params for MoE
     active_frac = rec.get("n_params_active", 1) / max(rec.get("n_params", 1), 1)
-    cache = rec.get("memory", {}).get("argument_size_in_bytes", 0) - rec.get("param_bytes", 0) / chips
+    cache = (rec.get("memory", {}).get("argument_size_in_bytes", 0)
+             - rec.get("param_bytes", 0) / chips)
     cache = max(cache, 0)
     logits = tokens * V * 2 / chips
     return p_dev * active_frac + cache + logits

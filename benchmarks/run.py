@@ -15,20 +15,36 @@ its paper anchor).  Individual modules offer richer CLIs:
 ``--smoke`` instead runs one ``repro.api.build_session(...).fit`` step for
 EVERY algorithm registered in ``repro.algos`` (mnist_mlp smoke arch) — the
 registry's rot check: a newly registered algorithm that can't complete a
-training step fails here (and in tests/test_api_smoke.py) immediately.
-Exit code is the gate: nonzero when any algorithm's fit step fails.
+training step fails here (and in tests/test_api_smoke.py) immediately —
+plus one fit step through the device-level "emu" backend, plus a reduced
+``benchmarks.mac_noise`` sweep checking the measured per-MAC effective
+bits against the paper's Fig. 3(c) values.  Exit code is the gate:
+nonzero when any of them fails.
 
 ``--bench`` measures training throughput (repro.bench.StepTimer over a
-data-parallel ``Session.fit``) and writes ``BENCH_train_throughput.json``;
-combined with ``--smoke`` it also writes ``BENCH_smoke.json``.  CI archives
-the ``BENCH_*.json`` files — they are the repo's perf trajectory.
+data-parallel ``Session.fit``) and writes ``BENCH_train_throughput.json``
+plus the drift/recalibration study (``benchmarks.drift_recovery``) as
+``BENCH_hardware.json``; combined with ``--smoke`` it also writes
+``BENCH_smoke.json``.  CI archives the ``BENCH_*.json`` files — they are
+the repo's perf trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
 import os
 import time
+
+
+def _sibling(name: str):
+    """Import a sibling benchmark module under either invocation style:
+    ``python -m benchmarks.run`` (package) or ``python benchmarks/run.py``
+    (CI — sys.path[0] is the benchmarks dir itself)."""
+    try:
+        return importlib.import_module(f"benchmarks.{name}")
+    except ModuleNotFoundError:
+        return importlib.import_module(name)
 
 
 def _timed(fn):
@@ -136,6 +152,17 @@ def tab_roofline():
                    worst["compute_fraction"], worst["arch"], worst["shape"]))
 
 
+def tab_drift_recovery():
+    from benchmarks.drift_recovery import bench_metrics, run
+
+    us, rows = _timed(lambda: run(steps=128))
+    m = bench_metrics(rows)
+    return us, ("emu-vs-ref gap=%.2fpts; drift costs %.2fpts, "
+                "recalibration recovers %.2fpts"
+                % (m["emu_vs_ref_gap_pts"], m["drift_cost_pts"],
+                   m["recal_recovery_pts"]))
+
+
 TABLES = [
     ("fig3c_mac_noise", fig3c_mac_noise),
     ("fig5b_mnist_noise_robustness", fig5b_mnist_noise_robustness),
@@ -145,13 +172,31 @@ TABLES = [
     ("tab_dfa_vs_bp", tab_dfa_vs_bp),
     ("tab_ternary_error", tab_ternary_error),
     ("tab_dfa_pipeline_latency", tab_dfa_pipeline_latency),
+    ("tab_drift_recovery", tab_drift_recovery),
     ("tab_roofline", tab_roofline),
 ]
 
 
+def _smoke_mac_noise(n: int = 1024, tolerance_bits: float = 0.5):
+    """Reduced Fig. 3(c) sweep: every preset's measured effective bits must
+    land within ``tolerance_bits`` of the paper's value — the noise-model
+    calibration rot check (previously orphaned from CI)."""
+    run = _sibling("mac_noise").run
+
+    worst = 0.0
+    for r in run(n=n):
+        worst = max(worst, abs(r["measured_bits"] - r["paper_bits"]))
+    if worst > tolerance_bits:
+        raise AssertionError(
+            f"mac-noise calibration off by {worst:.2f} bits "
+            f"(> {tolerance_bits})")
+    return worst
+
+
 def smoke(bench_dir: str | None = None) -> int:
-    """One fit step per registered algorithm through repro.api; returns the
-    number of failing algorithms (the CLI exit code — CI gates on it).
+    """One fit step per registered algorithm through repro.api (plus the
+    device-level "emu" backend and the mac-noise calibration check);
+    returns the number of failures (the CLI exit code — CI gates on it).
     With ``bench_dir`` the per-algorithm timings land in BENCH_smoke.json."""
     import jax
 
@@ -159,11 +204,16 @@ def smoke(bench_dir: str | None = None) -> int:
 
     failures = 0
     rows = []
+    cells = [(name, {}) for name in algos.list_algos()]
+    # the hardware-emulation backend through the same rot check (drifting
+    # device + in-situ calibration exercised by the fit step)
+    cells.append(("dfa@emu", {"backend": "emu", "hardware": "emu_onchip",
+                              "recalibrate_every": 1}))
     print("smoke: algo,us_per_call,loss")
-    for name in algos.list_algos():
+    for name, extra in cells:
         try:
-            session = api.build_session(arch="mnist_mlp", algo=name,
-                                        smoke=True, log_every=10**9)
+            session = api.build_session(arch="mnist_mlp", algo=name.split("@")[0],
+                                        smoke=True, log_every=10**9, **extra)
             key = jax.random.PRNGKey(0)
             batch = {
                 "x": jax.random.normal(key, (16, session.model.in_dim)),
@@ -179,6 +229,13 @@ def smoke(bench_dir: str | None = None) -> int:
             failures += 1
             rows.append({"algo": name, "error": f"{type(ex).__name__}: {str(ex)[:200]}"})
             print(f"{name},0,ERROR {type(ex).__name__}: {str(ex)[:120]}", flush=True)
+    try:
+        us, worst = _timed(_smoke_mac_noise)
+        print(f"mac_noise,{us:.0f},worst_bits_err={worst:.3f}", flush=True)
+    except Exception as ex:
+        failures += 1
+        print(f"mac_noise,0,ERROR {type(ex).__name__}: {str(ex)[:120]}",
+              flush=True)
     if bench_dir is not None:
         from repro.bench import write_bench
 
@@ -220,6 +277,15 @@ def bench_throughput(out_dir: str = ".", steps: int = 32, batch: int = 256,
     return path
 
 
+def bench_hardware(out_dir: str = ".", steps: int = 192) -> str:
+    """Run the drift/recalibration study and write BENCH_hardware.json."""
+    dr = _sibling("drift_recovery")
+
+    path = dr.write_report(dr.run(steps=steps), out_dir)
+    print(f"[bench] wrote {path}", flush=True)
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -231,6 +297,8 @@ def main() -> None:
     ap.add_argument("--bench-steps", type=int, default=32)
     ap.add_argument("--bench-batch", type=int, default=256)
     ap.add_argument("--bench-algo", default="dfa")
+    ap.add_argument("--hardware-steps", type=int, default=192,
+                    help="training steps per drift_recovery variant")
     args = ap.parse_args()
     if args.smoke:
         failures = smoke(bench_dir=args.bench_dir if args.bench else None)
@@ -240,6 +308,7 @@ def main() -> None:
     if args.bench:
         bench_throughput(out_dir=args.bench_dir, steps=args.bench_steps,
                          batch=args.bench_batch, algo=args.bench_algo)
+        bench_hardware(out_dir=args.bench_dir, steps=args.hardware_steps)
         return
     print("name,us_per_call,derived")
     for name, fn in TABLES:

@@ -346,8 +346,9 @@ def grad_alignment(dfa_grads, bp_grads):
             jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
             for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
         )
-        na = jnp.sqrt(sum(jnp.vdot(x, x) for x in map(lambda t: t.astype(jnp.float32), jax.tree_util.tree_leaves(a))))
-        nb = jnp.sqrt(sum(jnp.vdot(x, x) for x in map(lambda t: t.astype(jnp.float32), jax.tree_util.tree_leaves(b))))
+        f32 = lambda t: t.astype(jnp.float32)
+        na = jnp.sqrt(sum(jnp.vdot(x, x) for x in map(f32, jax.tree_util.tree_leaves(a))))
+        nb = jnp.sqrt(sum(jnp.vdot(x, x) for x in map(f32, jax.tree_util.tree_leaves(b))))
         out[name] = num / jnp.maximum(na * nb, 1e-12)
     return out
 

@@ -6,10 +6,17 @@ The paper's experiment grid is three independent axes:
 * **algo**     — a name in ``repro.algos`` (``bp`` | ``dfa`` | ``dfa-fused``
   | ``dfa-layerwise`` | anything registered later)
 * **hardware** — a ``core.photonics`` preset name (``ideal`` |
-  ``single_mrr`` | ``offchip_bpd`` | ``onchip_bpd`` | ``digital``) or a
+  ``single_mrr`` | ``offchip_bpd`` | ``onchip_bpd`` | ``digital`` |
+  ``emu_ideal`` | ``emu_offchip`` | ``emu_onchip``) or a
   ``PhotonicConfig`` instance
 * **backend**  — how projections execute: ``auto`` | ``ref`` | ``pallas``
-  (or a ``PhotonicBackend`` instance)
+  | ``emu`` (or a ``PhotonicBackend`` instance)
+
+The ``emu`` backend runs projections through the device-level MRR
+emulation (``repro.hardware``): when the chosen hardware carries no
+``MRRConfig`` the default device (drift ON) is attached, and
+``recalibrate_every`` defaults to periodic in-situ recalibration so long
+fits degrade — and recover — realistically.
 
 Typical use::
 
@@ -113,16 +120,29 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
                   feedback: fb_lib.FeedbackConfig | None = None,
                   microbatches: int = 1,
                   data_parallel: bool | str = "auto", prefetch: int = 2,
+                  recalibrate_every: int | None = None,
                   ckpt_dir: str | None = None,
                   ckpt_every: int = 500, log_every: int = 50,
                   log_path: str | None = None,
                   step_deadline_s: float | None = None) -> Session:
     """Compose one cell of the algorithm × hardware × backend matrix."""
     model = build_model(arch, smoke=smoke, dtype=dtype)
-    algorithm = algos.get(algo)       # fail fast on unknown names
-    photonics.get_backend(backend)    # (likewise for the backend)
+    algorithm = algos.get(algo)             # fail fast on unknown names
+    backend_obj = photonics.get_backend(backend)  # (likewise for the backend)
+    hw_cfg = resolve_hardware(hardware)
+    if backend_obj.stateful_hardware and hw_cfg.mrr is None:
+        # device-level backend with an abstract hardware preset: attach the
+        # default device description (drift ON) so the emulation has a bank
+        from repro.hardware.mrr import MRRConfig
+
+        hw_cfg = dataclasses.replace(hw_cfg, mrr=MRRConfig())
+    if recalibrate_every is None:
+        # default cadence: in-situ recalibration on for any drifting device
+        drifting = (backend_obj.stateful_hardware and hw_cfg.mrr is not None
+                    and hw_cfg.mrr.stateful)
+        recalibrate_every = 500 if drifting else 0
     dfa_cfg = DFAConfig(
-        photonics=resolve_hardware(hardware),
+        photonics=hw_cfg,
         feedback=feedback or fb_lib.FeedbackConfig(),
         error_compress=error_compress,
         backend=backend,
@@ -133,6 +153,7 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
         optimizer=optimizer or SGDM(lr=0.01, momentum=0.9),
         seed=seed, microbatches=microbatches,
         data_parallel=data_parallel, prefetch=prefetch,
+        recalibrate_every=recalibrate_every,
         ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
         log_every=log_every, log_path=log_path,
         step_deadline_s=step_deadline_s,

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import annotate
+from repro.hardware.mrr import MRRConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,21 +53,32 @@ class PhotonicConfig:
     input_bits: int | None = None  # fake-quant of modulator amplitudes (DAC)
     f_s: float = 10e9  # operational rate (Hz), DAC-limited per the paper
     enabled: bool = True
+    # device-level description for the "emu" backend (repro.hardware):
+    # Lorentzian rings, crosstalk, drift, calibration.  None = the abstract
+    # σ-per-MAC model only; the ref/pallas backends ignore it either way.
+    mrr: MRRConfig | None = None
 
     @property
     def effective_bits(self) -> float:
-        if self.noise_std <= 0:
-            return float("inf")
-        return math.log2(2.0 / self.noise_std)
+        """log2(2/σ) — exact inverse of ``resolution_to_sigma``."""
+        return sigma_to_resolution(self.noise_std)
 
 
-# Paper-measured hardware presets (Figs. 3c, 5a).
+# Paper-measured hardware presets (Figs. 3c, 5a).  The emu_* presets pair
+# the measured per-pass σ with a device-level MRRConfig for the "emu"
+# backend: emu_ideal is the nonideality-free bank (backend-equivalence
+# baseline); emu_offchip / emu_onchip add realistic heater DACs, output
+# ADCs, thermal crosstalk, and resonance drift (pair with
+# ``TrainerConfig.recalibrate_every`` for in-situ calibration).
 PRESETS: dict[str, PhotonicConfig] = {
     "ideal": PhotonicConfig(noise_std=0.0),
     "single_mrr": PhotonicConfig(noise_std=0.019),
     "offchip_bpd": PhotonicConfig(noise_std=0.098),
     "onchip_bpd": PhotonicConfig(noise_std=0.202),
     "digital": PhotonicConfig(enabled=False),
+    "emu_ideal": PhotonicConfig(noise_std=0.0, mrr=MRRConfig.ideal()),
+    "emu_offchip": PhotonicConfig(noise_std=0.098, mrr=MRRConfig(adc_bits=10)),
+    "emu_onchip": PhotonicConfig(noise_std=0.202, mrr=MRRConfig(adc_bits=8)),
 }
 
 
@@ -74,13 +86,27 @@ def preset(name: str) -> PhotonicConfig:
     return PRESETS[name]
 
 
-def bits_to_std(bits: float) -> float:
-    """Effective resolution (bits) -> full-scale noise σ.  log2(2/σ)=bits."""
+def resolution_to_sigma(bits: float) -> float:
+    """Effective resolution (bits) -> full-scale noise σ = 2^(1-bits)."""
     return 2.0 ** (1.0 - bits)
 
 
+def sigma_to_resolution(sigma: float) -> float:
+    """Full-scale noise σ -> effective bits = log2(2/σ), computed as
+    1 - log2(σ) so the pair round-trips to float precision (the naive
+    ``log2(2/σ)`` adds a division rounding; tests/test_photonics.py
+    property-tests the inverse both ways)."""
+    return 1.0 - math.log2(sigma) if sigma > 0 else float("inf")
+
+
+def bits_to_std(bits: float) -> float:
+    """Alias of ``resolution_to_sigma`` (historical name)."""
+    return resolution_to_sigma(bits)
+
+
 def std_to_bits(std: float) -> float:
-    return math.log2(2.0 / std) if std > 0 else float("inf")
+    """Alias of ``sigma_to_resolution`` (historical name)."""
+    return sigma_to_resolution(std)
 
 
 def fake_quant(x, bits: int | None, amax=None):
@@ -172,6 +198,10 @@ class PhotonicBackend:
     """Executes C = A @ Bᵀ (+ bank noise, ⊙ mask) with a:(T,K), b:(M,K)."""
 
     name = "base"
+    # True when the backend consumes carried hardware state (drift /
+    # calibration residuals): the Trainer then creates, advances, and
+    # threads a per-ring state pytree through fit (see repro.hardware).
+    stateful_hardware = False
 
     def matmul(self, a, b, cfg: PhotonicConfig, key=None, *, mask=None):
         raise NotImplementedError
@@ -203,6 +233,23 @@ class PallasBackend(PhotonicBackend):
                                     interpret=self.interpret)
 
 
+@dataclasses.dataclass(frozen=True)
+class EmulatedMRRBackend(PhotonicBackend):
+    """Device-level MRR bank emulation (repro.hardware.channel): Lorentzian
+    ring transfer, heater inscription + DAC, thermal crosstalk, BPD
+    shot/read noise, per-pass ADC — and, under the Trainer, stateful
+    resonance drift with in-situ recalibration.  ``cfg.mrr`` describes the
+    device (None falls back to ``MRRConfig()`` defaults)."""
+
+    name: str = "emu"
+    stateful_hardware = True
+
+    def matmul(self, a, b, cfg, key=None, *, mask=None):
+        from repro.hardware import channel  # lazy: hardware imports us
+
+        return channel.emulated_matmul(a, b, cfg, key=key, mask=mask)
+
+
 BACKENDS: dict[str, PhotonicBackend] = {}
 
 
@@ -213,6 +260,7 @@ def register_backend(backend: PhotonicBackend) -> PhotonicBackend:
 
 register_backend(ReferenceBackend())
 register_backend(PallasBackend())
+register_backend(EmulatedMRRBackend())
 
 
 def get_backend(spec: str | PhotonicBackend = "auto") -> PhotonicBackend:

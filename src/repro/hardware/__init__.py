@@ -1,0 +1,41 @@
+"""``repro.hardware`` — physics-grade MRR weight-bank emulation.
+
+Layout (one concern per module):
+
+* ``mrr``       — Lorentzian ring transfer, weight→heater inscription,
+  thermal-crosstalk geometry, and the ``MRRConfig`` device description
+* ``channel``   — the composable signal chain (DAC → modulator → ring bank
+  → balanced photodetector → ADC), tiled over bank panels; the "emu"
+  ``PhotonicBackend`` calls ``channel.emulated_matmul``
+* ``drift``     — stateful per-ring resonance drift (OU process) + the
+  context that threads the Trainer's carried hardware state into the chain
+* ``calibrate`` — in-situ calibration: LUT inversion, crosstalk
+  pre-compensation, periodic recalibration sweeps
+
+Import discipline: ``core.photonics`` imports ``repro.hardware.mrr`` (for
+``PhotonicConfig.mrr`` and the emu presets), and ``channel``/``calibrate``
+import ``core.photonics`` back — so this ``__init__`` eagerly loads ONLY
+the leaf ``mrr`` module and resolves the rest lazily (PEP 562), keeping the
+package import-cycle-free from either direction.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.hardware.mrr import MRRConfig
+
+_SUBMODULES = ("mrr", "channel", "drift", "calibrate")
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.hardware.{name}")
+    raise AttributeError(f"module 'repro.hardware' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted([*globals(), *_SUBMODULES])
+
+
+__all__ = ["MRRConfig", *_SUBMODULES]

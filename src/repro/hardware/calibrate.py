@@ -1,0 +1,91 @@
+"""In-situ calibration: per-ring lookup-table inversion, crosstalk
+pre-compensation, and the periodic recalibration sweep.
+
+This is the paper's enabling systems idea (shared with Pai et al.'s in-situ
+backpropagation): the controller never needs a perfect device, only a
+*measured* one.  Three mechanisms:
+
+* ``command_deltas`` — the per-ring LUT inversion: target weight →
+  commanded heater detuning via the exact Lorentzian inverse
+  (``mrr.inscribe``), a Jacobi pre-inversion of the known nearest-neighbour
+  thermal coupling, and the heater-DAC quantization of the command.
+* ``measure`` — a calibration sweep: reads the current per-ring drift with
+  ``cal_noise`` measurement error (on chip: sweep each ring past resonance
+  and locate the transmission minimum).
+* ``advance`` — one train step of hardware evolution: OU-drift every ring,
+  and on the recalibration cadence (``TrainerConfig.recalibrate_every``)
+  replace the stored estimate with a fresh measurement.  Between sweeps the
+  uncompensated residual grows as σ·sqrt(1 - exp(-2Δt/τ)) — the quantity
+  ``benchmarks/drift_recovery.py`` studies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.hardware import drift as drift_lib
+from repro.hardware import mrr
+
+
+def quantize_command(delta_cmd, cfg: mrr.MRRConfig):
+    """Heater-DAC quantization: the commanded detuning is driven through a
+    ``heater_bits``-deep DAC spanning [0, delta_max]."""
+    if cfg.heater_bits is None:
+        return delta_cmd
+    levels = 2**cfg.heater_bits - 1
+    d = jnp.clip(delta_cmd / cfg.delta_max, 0.0, 1.0) * levels
+    return jnp.round(d) / levels * cfg.delta_max
+
+
+def compensate_crosstalk(delta_target, cfg: mrr.MRRConfig, row_axis: int | None = None,
+                         col_axis: int | None = None):
+    """Solve (I + c·N)·δ_cmd = δ_target by Jacobi iteration so that after
+    the physical leak the realized detuning is ≈ the target.  Converges
+    geometrically for c·‖N‖ < 1 (c is a few 1e-3; ‖N‖ ≤ 4)."""
+    delta_cmd = delta_target
+    for _ in range(cfg.ct_iters):
+        delta_cmd = delta_target - mrr.crosstalk_leak(
+            delta_cmd, cfg, row_axis, col_axis)
+    return delta_cmd
+
+
+def command_deltas(w_target, cfg: mrr.MRRConfig, row_axis: int | None = None,
+                   col_axis: int | None = None):
+    """Target weights -> commanded heater detunings (the controller's whole
+    write path: LUT inversion, crosstalk pre-inversion, heater DAC)."""
+    delta = mrr.inscribe(w_target, cfg)
+    if cfg.crosstalk != 0.0 and cfg.compensate_crosstalk:
+        delta = compensate_crosstalk(delta, cfg, row_axis, col_axis)
+    delta = jnp.clip(delta, 0.0, cfg.delta_max)
+    return quantize_command(delta, cfg)
+
+
+def measure(drift, key, cfg: mrr.MRRConfig):
+    """One calibration sweep: the true per-ring drift plus measurement
+    noise.  With ``cal_noise=0`` calibration is perfect."""
+    if cfg.cal_noise == 0.0:
+        return drift
+    return drift + cfg.cal_noise * jax.random.normal(key, drift.shape,
+                                                     drift.dtype)
+
+
+def advance(state: dict, photonics_cfg, step, key,
+            recalibrate_every: int = 0) -> dict:
+    """Advance the carried hardware state by one train step.
+
+    ``step`` may be a traced int32 (the Trainer calls this inside jit);
+    ``recalibrate_every`` is static — 0 disables recalibration entirely, so
+    the stored estimate stays frozen and the residual follows the raw OU
+    drift."""
+    cfg = photonics_cfg.mrr or mrr.MRRConfig()
+    d = state["drift"]
+    if cfg.drift_sigma > 0.0:
+        d = drift_lib.ou_step(d, jax.random.fold_in(key, 1),
+                              cfg.drift_sigma, cfg.drift_tau)
+    cal = state["cal"]
+    if recalibrate_every and recalibrate_every > 0:
+        fresh = measure(d, jax.random.fold_in(key, 2), cfg)
+        do_recal = (jnp.asarray(step) % recalibrate_every) == 0
+        cal = jnp.where(do_recal, fresh, cal)
+    return {"drift": d, "cal": cal}

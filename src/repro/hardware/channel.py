@@ -1,0 +1,155 @@
+"""The emulated analog signal chain: DAC → modulator → MRR bank (with
+crosstalk + drift) → balanced photodetector → ADC, tiled over bank panels.
+
+This is the device-fidelity twin of ``core.photonics.photonic_matmul``.
+Both share ``photonics.normalise_operands`` (per-tensor amplitude encoding
+into the photonic [-1, 1] range plus the input/weight fake-quant), so the
+"emu" backend drops into every call site of the ``ref``/``pallas``
+backends unchanged.  What differs is everything between encode and rescale:
+
+1.  The GeMM compiler's tiling (paper §3): A:(T,K)·B:(M,K)ᵀ is split into
+    ⌈M/bank_rows⌉ × ⌈K/bank_cols⌉ panels, each one operational pass of the
+    SAME physical bank — so the per-ring drift/crosstalk state has shape
+    (bank_rows, bank_cols) and is shared across panels.
+2.  Weight inscription (``calibrate.command_deltas``): Lorentzian LUT
+    inversion, crosstalk pre-compensation, heater-DAC quantization.
+3.  The physical leak + drift residual perturb the commanded detunings;
+    ``mrr.ring_weight`` maps them back to the *realized* weights.
+4.  Per-pass BPD noise: the thermal/read floor (``cfg.noise_std``, same
+    convention as the abstract model — per-pass "absolute" or bank
+    full-scale) plus signal-dependent shot noise, then the per-pass ADC.
+5.  Passes accumulate digitally; the result is rescaled and the optional
+    Hadamard mask (the TIA gain epilogue) applies after noise, as on chip.
+
+With ``MRRConfig.ideal()`` and ``noise_std=0`` the chain is numerically the
+plain matmul (inscription round-trips exactly); with nonzero ``noise_std``
+and no device effects the accumulated noise is statistically identical to
+the reference path's single draw — tests/test_hardware.py holds both.
+
+Everything is pure jnp on tile-stacked arrays (the tile axes ride through
+``einsum``, i.e. implicitly vmapped), so callers can jit/vmap/grad through
+it; the Trainer jits it as part of the train step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import photonics
+from repro.hardware import calibrate
+from repro.hardware import drift as drift_lib
+from repro.hardware import mrr
+
+
+def _pad_axis(x, mult: int, axis: int):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def tile_operands(a_n, b_n, cfg):
+    """Split normalised operands into bank-sized panels.
+
+    a_n: (T, K) -> (T, nk, cols);  b_n: (M, K) -> (nm, rows, nk, cols).
+    Zero padding is harmless: padded K columns multiply zero inputs and
+    padded M rows are sliced off the output.
+    """
+    rows, cols = cfg.bank_rows, cfg.bank_cols
+    t = a_n.shape[0]
+    a_p = _pad_axis(a_n, cols, 1)
+    nk = a_p.shape[1] // cols
+    a_t = a_p.reshape(t, nk, cols)
+    b_p = _pad_axis(_pad_axis(b_n, rows, 0), cols, 1)
+    nm = b_p.shape[0] // rows
+    b_t = b_p.reshape(nm, rows, nk, cols)
+    return a_t, b_t
+
+
+def realized_weights(w_target, cfg, residual=None):
+    """The full inscription path: targets -> commanded heaters -> physical
+    detunings (leak + drift residual) -> realized Lorentzian weights.
+
+    ``w_target``: (..., rows, nk, cols) panel layout (or a bare
+    (rows, cols) grid); ``residual``: per-ring (rows, cols) detuning error
+    broadcast over panels.
+    """
+    device = cfg.mrr or mrr.MRRConfig()
+    delta_cmd = calibrate.command_deltas(w_target, device)
+    delta_eff = delta_cmd + mrr.crosstalk_leak(delta_cmd, device)
+    if residual is not None:
+        if w_target.ndim >= 3:  # panel layout: broadcast over (nm, nk)
+            delta_eff = delta_eff + residual[..., :, None, :]
+        else:
+            delta_eff = delta_eff + residual
+    return mrr.ring_weight(delta_eff, device.gamma)
+
+
+def _per_pass_sigma(cfg) -> float:
+    """Per-bank-pass BPD read-noise σ in normalised units — the same
+    convention switch as ``photonics.noise_sigma_total``."""
+    if cfg.noise_convention == "absolute":
+        return cfg.noise_std
+    if cfg.noise_convention == "fullscale":
+        return cfg.noise_std * cfg.bank_cols
+    raise ValueError(cfg.noise_convention)
+
+
+def bank_product(a_n, b_n, cfg, key=None, *, residual=None):
+    """Noisy panel-accumulated product of normalised operands.
+
+    a_n: (T, K), b_n: (M, K) in [-1, 1]  ->  (T, M) in bank output units.
+    """
+    device = cfg.mrr or mrr.MRRConfig()
+    t, _k = a_n.shape
+    m = b_n.shape[0]
+    a_t, b_t = tile_operands(a_n, b_n, cfg)
+    w_eff = realized_weights(b_t, cfg, residual)
+    # one einsum over all (nm, nk) panels: p[t, i, r, j] is the partial sum
+    # of output row block i, ring row r, contraction pass j
+    p = jnp.einsum("tjc,irjc->tirj", a_t, w_eff)
+    sigma = _per_pass_sigma(cfg)
+    if sigma > 0.0 or device.shot_noise > 0.0:
+        if key is None:
+            raise ValueError("noisy emulated bank requires a PRNG key")
+        k_th, k_sh = jax.random.split(key)
+        noise = jnp.zeros_like(p)
+        if sigma > 0.0:
+            noise += sigma * jax.random.normal(k_th, p.shape, p.dtype)
+        if device.shot_noise > 0.0:
+            # shot noise scales with the *clean* per-pass optical signal —
+            # independent of (not seeded by) the thermal/read draw
+            noise += (device.shot_noise * jnp.sqrt(jnp.abs(p))
+                      * jax.random.normal(k_sh, p.shape, p.dtype))
+        p = p + noise
+    if device.adc_bits is not None:
+        # each pass is digitised before accumulating; ADC full scale is the
+        # bank's maximal inner product, ±bank_cols in normalised units
+        p = photonics.fake_quant(p, device.adc_bits, amax=float(cfg.bank_cols))
+    out = jnp.sum(p, axis=-1)  # digital accumulation over contraction passes
+    return out.reshape(t, -1)[:, :m]
+
+
+def emulated_matmul(a, b, cfg, key=None, *, mask=None, state=None):
+    """Device-emulated C = A @ Bᵀ — drop-in for
+    ``photonics.photonic_matmul`` (the "emu" backend entry point).
+
+    a: (T, K) amplitude-encoded inputs; b: (M, K) target weights; mask:
+    optional (T, M) post-detection Hadamard epilogue.  ``state`` overrides
+    the drift state; by default the Trainer's active ``drift.use_state``
+    context is consulted, and with neither the bank is drift-free.
+    """
+    if not cfg.enabled:
+        out = jnp.einsum("tk,mk->tm", a, b)
+        return out * mask if mask is not None else out
+    a_n, b_n, s_a, s_b = photonics.normalise_operands(a, b, cfg)
+    if state is None:
+        state = drift_lib.active_state()
+    residual = drift_lib.residual(state) if state is not None else None
+    out = bank_product(a_n, b_n, cfg, key, residual=residual)
+    out = out * (s_a * s_b)
+    out = out * mask if mask is not None else out
+    return out.astype(jnp.result_type(a, b))

@@ -1,0 +1,83 @@
+"""Stateful resonance drift: an Ornstein–Uhlenbeck process per physical
+ring, carried through training as hardware state.
+
+Real MRR banks drift — ambient temperature, heater aging, and slow laser
+wander all move each ring's resonance between calibration sweeps.  We model
+the per-ring detuning error as a discrete OU process
+
+    d[t+1] = a · d[t] + σ·sqrt(1 - a²) · ε,    a = exp(-1 / τ)
+
+whose stationary distribution is N(0, σ²) regardless of the step count —
+so long runs degrade realistically instead of diverging.  The state dict
+
+    {"drift": (bank_rows, bank_cols),   # actual detuning error, per ring
+     "cal":   (bank_rows, bank_cols)}   # controller's estimate at last sweep
+
+is created by ``init_state`` (a freshly calibrated chip: both zero),
+advanced once per train step by ``repro.hardware.calibrate.advance``, and
+carried in the Trainer's state pytree (checkpointed, replicated, donated
+like any other state).  Only the *residual* ``drift - cal`` is visible to
+the signal chain: the controller subtracts its estimate when commanding
+heaters, so calibration quality is exactly what bounds the realized error.
+
+The active state reaches the emulated matmul through a context stack
+(``use_state``): the Trainer pushes the step's state while tracing the
+jitted train step, and ``repro.hardware.channel`` reads it from inside the
+DFA projection without every intermediate API needing a new argument.
+Outside any context the residual is zero — a drift-free (statically
+calibrated) bank.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(cfg, key=None) -> dict:
+    """Fresh hardware state for a ``PhotonicConfig``-shaped bank: a just-
+    calibrated chip (zero drift, zero stored estimate).  ``key`` is unused
+    today but kept so a future warm-start draw stays call-compatible."""
+    shape = (cfg.bank_rows, cfg.bank_cols)
+    return {"drift": jnp.zeros(shape, jnp.float32),
+            "cal": jnp.zeros(shape, jnp.float32)}
+
+
+def ou_step(x, key, sigma: float, tau: float):
+    """One discrete OU step with stationary std ``sigma`` and relaxation
+    time ``tau`` (in steps)."""
+    a = math.exp(-1.0 / max(tau, 1e-9))
+    s = sigma * math.sqrt(max(1.0 - a * a, 0.0))
+    return a * x + s * jax.random.normal(key, x.shape, x.dtype)
+
+
+def residual(state: dict):
+    """The detuning error the controller has NOT compensated."""
+    return state["drift"] - state["cal"]
+
+
+# --------------------------------------------------------------------------
+# Active-state context (threads drift through jit tracing)
+# --------------------------------------------------------------------------
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_state(state: dict):
+    """Make ``state`` visible to ``channel.emulated_matmul`` for the dynamic
+    extent of the block.  Safe under jit: the Trainer enters the context
+    inside the traced step function, so the tracers it exposes are inputs of
+    the same trace that consumes them."""
+    _ACTIVE.append(state)
+    try:
+        yield state
+    finally:
+        _ACTIVE.pop()
+
+
+def active_state() -> dict | None:
+    return _ACTIVE[-1] if _ACTIVE else None

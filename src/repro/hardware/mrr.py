@@ -1,0 +1,129 @@
+"""Microring-resonator device physics: the Lorentzian transfer function and
+the weight → heater-detuning inscription (and its exact inverse).
+
+The paper's weight bank (§2) encodes each weight in one MRR read out by a
+balanced photodetector: the through- and drop-port photocurrents subtract,
+so the *effective* weight seen by the analog MAC is
+
+    w(δ) = T_thru(δ) - T_drop(δ) = 1 - 2·γ² / (γ² + δ²)
+         = (δ² - γ²) / (δ² + γ²)                          (Lorentzian BPD)
+
+where δ is the ring's detuning from the carrier (in the same units as the
+half-width γ).  δ = 0 (on resonance) gives w = -1 (all drop), δ → ∞ gives
+w = +1 (all through), δ = γ crosses w = 0.  Detuning is set thermally: the
+heater drive tunes δ over [0, delta_max]; ``inscribe`` is the controller's
+lookup-table inversion
+
+    δ(w) = γ · sqrt((1 + w) / (1 - w))
+
+which is the *exact* inverse of ``ring_weight`` on [-1, w_ceiling].  Weights
+at exactly +1 are unreachable (infinite detuning); the inscription clips at
+``w_ceiling(cfg)`` — with the default 100·γ tuning range that is an
+inscription error ≤ 2e-4 (≈ 12 bits), far below the measured analog noise.
+
+Everything here is plain ``jnp`` and differentiable; the signal chain that
+composes these pieces into a weight-bank matmul lives in
+``repro.hardware.channel``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+# f32 cannot resolve weights closer to 1 than its epsilon — clip there even
+# when the heater range allows more.
+_W_EPS = 1e-7
+
+
+@dataclasses.dataclass(frozen=True)
+class MRRConfig:
+    """Device-level nonidealities of one physical MRR weight bank.
+
+    The defaults model a realistic thermally-tuned bank (drift ON): pair
+    with ``TrainerConfig.recalibrate_every`` to study in-situ calibration.
+    ``MRRConfig.ideal()`` zeroes every nonideality — used by the
+    backend-equivalence tests and the ``emu_ideal`` preset.
+    """
+
+    gamma: float = 1.0  # Lorentzian half-width (detuning units)
+    delta_max: float = 100.0  # heater tuning range, in gamma units · gamma
+    heater_bits: int | None = 12  # heater-DAC resolution over [0, delta_max]
+    adc_bits: int | None = None  # per-pass output ADC (full scale = bank_cols)
+    crosstalk: float = 0.005  # nearest-neighbour thermal coupling coefficient
+    compensate_crosstalk: bool = True  # calibration pre-inverts the coupling
+    ct_iters: int = 2  # Jacobi iterations of the crosstalk inversion
+    shot_noise: float = 0.0  # signal-dependent BPD noise: σ·sqrt(|p|) per pass
+    drift_sigma: float = 0.05  # OU stationary detuning-drift std (gamma units)
+    drift_tau: float = 1000.0  # OU relaxation time (training steps)
+    cal_noise: float = 0.005  # detuning measurement noise of a calibration sweep
+
+    @classmethod
+    def ideal(cls) -> "MRRConfig":
+        """A bank with every nonideality off: exact Lorentzian round-trip
+        only (inscription error ~1e-7, i.e. f32 epsilon)."""
+        return cls(delta_max=1e6, heater_bits=None, adc_bits=None,
+                   crosstalk=0.0, shot_noise=0.0, drift_sigma=0.0,
+                   cal_noise=0.0)
+
+    @property
+    def stateful(self) -> bool:
+        """True when the device drifts — training must carry hardware state."""
+        return self.drift_sigma > 0.0
+
+
+def ring_weight(delta, gamma: float = 1.0):
+    """Lorentzian BPD transfer: detuning -> effective weight in [-1, 1)."""
+    d2 = jnp.square(delta)
+    g2 = gamma * gamma
+    return (d2 - g2) / (d2 + g2)
+
+
+def w_ceiling(cfg: MRRConfig) -> float:
+    """Largest inscribable weight: the transfer at full heater range
+    (python float — exact, config-static)."""
+    d2 = cfg.delta_max * cfg.delta_max
+    g2 = cfg.gamma * cfg.gamma
+    return min((d2 - g2) / (d2 + g2), 1.0 - _W_EPS)
+
+
+def inscribe(w, cfg: MRRConfig):
+    """Weight -> heater detuning δ(w) = γ·sqrt((1+w)/(1-w)); the exact
+    inverse of ``ring_weight`` after clipping to the reachable range."""
+    w_c = jnp.clip(w, -1.0, w_ceiling(cfg))
+    return cfg.gamma * jnp.sqrt((1.0 + w_c) / (1.0 - w_c))
+
+
+def _shifted(x, axis: int, off: int):
+    """x shifted by ``off`` along ``axis``, zero-filled at the edge."""
+    n = x.shape[axis]
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (max(off, 0), max(-off, 0))
+    lo = max(-off, 0)
+    return jnp.pad(x, pad).take(jnp.arange(lo, lo + n), axis=axis)
+
+
+def grid_axes(x) -> tuple[int, int]:
+    """(row_axis, col_axis) of the physical ring grid for either supported
+    layout: a bare (rows, cols) grid, or the tiled (..., rows, nk, cols)
+    panel stack where a k-tile axis sits between rows and cols."""
+    return ((-3, -1) if x.ndim >= 3 else (-2, -1))
+
+
+def neighbor_sum(delta, row_axis: int | None = None, col_axis: int | None = None):
+    """Sum of the 4 nearest neighbours on the physical (rows, cols) ring
+    grid — the thermal-crosstalk aggressor field.  Axes default to the
+    layout inferred by ``grid_axes``."""
+    if row_axis is None or col_axis is None:
+        row_axis, col_axis = grid_axes(delta)
+    return (_shifted(delta, row_axis, 1) + _shifted(delta, row_axis, -1)
+            + _shifted(delta, col_axis, 1) + _shifted(delta, col_axis, -1))
+
+
+def crosstalk_leak(delta_cmd, cfg: MRRConfig, row_axis: int | None = None,
+                   col_axis: int | None = None):
+    """Thermal power leaked into each ring by its grid neighbours."""
+    if cfg.crosstalk == 0.0:
+        return jnp.zeros_like(delta_cmd)
+    return cfg.crosstalk * neighbor_sum(delta_cmd, row_axis, col_axis)

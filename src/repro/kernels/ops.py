@@ -4,6 +4,12 @@ Handles: operand normalisation to the photonic [-1,1] range, fake-quant,
 padding to block multiples, noise-mode selection, and rescaling — so callers
 see the same semantics as ``repro.core.photonics.photonic_matmul`` (the
 pure-JAX path) but executed by the weight-bank kernel.
+
+The kernel implements the *abstract* noise model (σ per MAC/block) only:
+device-level effects carried by ``PhotonicConfig.mrr`` — Lorentzian
+transfer, thermal crosstalk, resonance drift — are the "emu" backend's
+domain (``repro.hardware.channel``) and are intentionally ignored here, so
+ref↔pallas equivalence is exact and perf comparisons stay apples-to-apples.
 """
 
 from __future__ import annotations

@@ -10,9 +10,11 @@ Small-scale (this container): runs real steps on the host devices.
 
 ``--algo`` accepts any name registered in ``repro.algos`` (bp, dfa,
 dfa-fused, dfa-layerwise, plus anything a plugin registers); ``--preset``
-is the photonic hardware model and ``--backend`` the execution path
-(ref | pallas | auto).  Adding an algorithm or backend is a registration —
-this launcher picks it up without edits.
+is the photonic hardware model (including the device-level ``emu_*``
+presets) and ``--backend`` the execution path (ref | pallas | emu | auto).
+``--recal-every`` sets the in-situ recalibration cadence for drifting
+hardware under the emu backend.  Adding an algorithm or backend is a
+registration — this launcher picks it up without edits.
 
 Production-scale posture: the same step function is what launch/dryrun.py
 lowers against the (pod, data, model) mesh; on a real multi-host cluster
@@ -53,6 +55,9 @@ def main():
                          "(auto: whenever >1 device exists)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="host->device input pipeline depth (0 disables)")
+    ap.add_argument("--recal-every", type=int, default=None,
+                    help="in-situ recalibration cadence (steps) for stateful "
+                         "emu hardware; default: 500 when the device drifts")
     ap.add_argument("--bench-json", default=None, metavar="DIR",
                     help="measure throughput and write "
                          "BENCH_train_throughput.json into DIR")
@@ -70,6 +75,7 @@ def main():
         log_every=max(1, args.steps // 20),
         data_parallel={"auto": "auto", "on": True, "off": False}[args.data_parallel],
         prefetch=args.prefetch,
+        recalibrate_every=args.recal_every,
     )
     model = session.model
     if session.mesh is not None:

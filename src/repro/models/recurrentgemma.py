@@ -142,7 +142,8 @@ class RecurrentGemmaLM(DFAModel):
     def init(self, key):
         c = self.cfg
         params = {
-            "embed": {"tok": Embedding(c.vocab_size, c.d_model, c.dtype).init(named_key(key, "tok"))},
+            "embed": {"tok": Embedding(c.vocab_size, c.d_model,
+                                       c.dtype).init(named_key(key, "tok"))},
             "grp_rec1": stack_init(self._rec(), named_key(key, "grp_rec1"), c.n_groups),
             "grp_rec2": stack_init(self._rec(), named_key(key, "grp_rec2"), c.n_groups),
             "grp_attn": stack_init(self._attn(), named_key(key, "grp_attn"), c.n_groups),

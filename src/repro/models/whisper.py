@@ -149,14 +149,17 @@ class WhisperModel(DFAModel):
         c = self.cfg
         return {
             "embed": {
-                "audio": AudioFrontendStub(c.d_model, c.n_frames, c.dtype).init(named_key(key, "audio")),
+                "audio": AudioFrontendStub(c.d_model, c.n_frames,
+                                           c.dtype).init(named_key(key, "audio")),
                 "tok": Embedding(c.v_padded, c.d_model, c.dtype).init(named_key(key, "tok")),
-                "pos": (jax.random.normal(named_key(key, "pos"), (c.max_target, c.d_model)) * 0.01).astype(c.dtype),
+                "pos": (jax.random.normal(named_key(key, "pos"),
+                                          (c.max_target, c.d_model)) * 0.01).astype(c.dtype),
             },
             "enc": stack_init(_EncLayer(c), named_key(key, "enc"), c.n_enc_layers),
             "dec": stack_init(_DecLayer(c), named_key(key, "dec"), c.n_dec_layers),
             "head": {
-                "ln_enc": LayerNorm(c.d_model, c.norm_eps, dtype=c.dtype).init(named_key(key, "ln_enc")),
+                "ln_enc": LayerNorm(c.d_model, c.norm_eps,
+                                    dtype=c.dtype).init(named_key(key, "ln_enc")),
                 "ln": LayerNorm(c.d_model, c.norm_eps, dtype=c.dtype).init(named_key(key, "ln")),
                 "out": Linear(c.d_model, c.v_padded, dtype=c.dtype).init(named_key(key, "out")),
             },

@@ -315,7 +315,8 @@ class CrossAttention(Module):
         return self.d_model // self.n_heads
 
     def init(self, key):
-        mk = lambda n, b: Linear(self.d_model, self.d_model, use_bias=b, dtype=self.dtype).init(named_key(key, n))
+        mk = lambda n, b: Linear(self.d_model, self.d_model, use_bias=b,
+                                 dtype=self.dtype).init(named_key(key, n))
         return {"q": mk("q", self.use_bias), "k": mk("k", False),
                 "v": mk("v", self.use_bias), "o": mk("o", self.use_bias)}
 
@@ -323,9 +324,13 @@ class CrossAttention(Module):
         b, s, _ = x.shape
         se = enc.shape[1]
         hd = self.hd
-        q = (x @ params["q"]["w"] + (params["q"].get("b", 0.0) if self.use_bias else 0.0)).reshape(b, s, self.n_heads, hd)
+        q = (x @ params["q"]["w"]
+             + (params["q"].get("b", 0.0) if self.use_bias else 0.0)
+             ).reshape(b, s, self.n_heads, hd)
         k = (enc @ params["k"]["w"]).reshape(b, se, self.n_heads, hd)
-        v = (enc @ params["v"]["w"] + (params["v"].get("b", 0.0) if self.use_bias else 0.0)).reshape(b, se, self.n_heads, hd)
+        v = (enc @ params["v"]["w"]
+             + (params["v"].get("b", 0.0) if self.use_bias else 0.0)
+             ).reshape(b, se, self.n_heads, hd)
         kp = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
 
         def attend(qc, qpc):
@@ -413,13 +418,16 @@ class MLAttention(Module):
         q, c_kv, k_rope = self._latents(params, x, positions)
         k_nope = (c_kv @ params["k_up"]["w"]).reshape(b, s, h, self.qk_nope_dim)
         v = (c_kv @ params["v_up"]["w"]).reshape(b, s, h, self.v_head_dim)
-        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, self.qk_rope_dim))], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, self.qk_rope_dim))], axis=-1)
         scale = 1.0 / math.sqrt(self.qk_dim)
         # v_head_dim != qk_dim → pad V for the shared kernels, slice after
         pad = self.qk_dim - self.v_head_dim
         v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else v
         if s <= 2 * k_chunk:
-            out = reference_attention(q, k, v_p, q_pos=positions, kv_pos=positions, causal=True, scale=scale)
+            out = reference_attention(q, k, v_p, q_pos=positions,
+                                      kv_pos=positions, causal=True, scale=scale)
         else:
             out = flash_attention(q, k, v_p, q_pos=positions, kv_pos=positions, causal=True,
                                   scale=scale, q_chunk=q_chunk, k_chunk=k_chunk)
@@ -447,7 +455,8 @@ class MLAttention(Module):
         w_uk = params["k_up"]["w"].reshape(self.kv_lora_rank, h, self.qk_nope_dim)
         q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
         scores = jnp.einsum("bqhr,bkr->bhqk", q_abs, c_cache.astype(jnp.float32))
-        scores += jnp.einsum("bqhp,bkp->bhqk", q_rope.astype(jnp.float32), r_cache.astype(jnp.float32))
+        scores += jnp.einsum("bqhp,bkp->bhqk", q_rope.astype(jnp.float32),
+                             r_cache.astype(jnp.float32))
         scores *= 1.0 / math.sqrt(self.qk_dim)
         valid = jnp.arange(c_cache.shape[1])[None, :] < (cache_len + 1)[:, None]
         scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)

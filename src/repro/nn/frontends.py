@@ -31,7 +31,8 @@ class AudioFrontendStub(Module):
 
     def init(self, key):
         return {
-            "pos": initializers.normal(0.01)(named_key(key, "pos"), (self.max_frames, self.d_model), self.dtype),
+            "pos": initializers.normal(0.01)(
+                named_key(key, "pos"), (self.max_frames, self.d_model), self.dtype),
             "ln": LayerNorm(self.d_model, dtype=self.dtype).init(named_key(key, "ln")),
         }
 
@@ -52,7 +53,8 @@ class VisionFrontendStub(Module):
 
     def init(self, key):
         return {
-            "proj": Linear(self.d_vision, self.d_model, use_bias=True, dtype=self.dtype).init(named_key(key, "proj")),
+            "proj": Linear(self.d_vision, self.d_model, use_bias=True,
+                           dtype=self.dtype).init(named_key(key, "proj")),
             "ln": LayerNorm(self.d_vision, dtype=self.dtype).init(named_key(key, "ln")),
         }
 

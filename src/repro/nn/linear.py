@@ -21,9 +21,11 @@ class Linear(Module):
 
     def init(self, key):
         if self.init_std is None:
-            w = initializers.lecun_normal()(named_key(key, "w"), (self.in_dim, self.out_dim), self.dtype)
+            w = initializers.lecun_normal()(
+                named_key(key, "w"), (self.in_dim, self.out_dim), self.dtype)
         else:
-            w = initializers.normal(self.init_std)(named_key(key, "w"), (self.in_dim, self.out_dim), self.dtype)
+            w = initializers.normal(self.init_std)(
+                named_key(key, "w"), (self.in_dim, self.out_dim), self.dtype)
         p = {"w": w}
         if self.use_bias:
             p["b"] = jnp.zeros((self.out_dim,), self.dtype)
@@ -102,8 +104,10 @@ class MLP(Module):
 
     def init(self, key):
         return {
-            "fc1": Linear(self.d_model, self.d_ff, self.use_bias, self.dtype).init(named_key(key, "fc1")),
-            "fc2": Linear(self.d_ff, self.d_model, self.use_bias, self.dtype).init(named_key(key, "fc2")),
+            "fc1": Linear(self.d_model, self.d_ff, self.use_bias,
+                          self.dtype).init(named_key(key, "fc1")),
+            "fc2": Linear(self.d_ff, self.d_model, self.use_bias,
+                          self.dtype).init(named_key(key, "fc2")),
         }
 
     def __call__(self, params, x):

@@ -45,7 +45,8 @@ def stack_init(module: Module, key: jax.Array, n: int) -> Params:
 
 def layer_slice(stacked: Params, i) -> Params:
     """Select layer ``i`` from stacked params (dynamic index ok)."""
-    return jax.tree_util.tree_map(lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False), stacked)
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False), stacked)
 
 
 def named_key(key: jax.Array, name: str) -> jax.Array:

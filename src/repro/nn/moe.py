@@ -47,12 +47,14 @@ class MoE(Module):
     def init(self, key):
         expert = GatedMLP(self.d_model, self.d_ff_expert, self.activation, self.dtype)
         p = {
-            "router": Linear(self.d_model, self.n_experts, dtype=self.dtype).init(named_key(key, "router")),
+            "router": Linear(self.d_model, self.n_experts,
+                             dtype=self.dtype).init(named_key(key, "router")),
             "experts": stack_init(expert, named_key(key, "experts"), self.n_experts),
         }
         if self.n_shared_experts:
             d_sh = (self.d_ff_shared or self.d_ff_expert) * self.n_shared_experts
-            p["shared"] = GatedMLP(self.d_model, d_sh, self.activation, self.dtype).init(named_key(key, "shared"))
+            p["shared"] = GatedMLP(self.d_model, d_sh, self.activation,
+                                   self.dtype).init(named_key(key, "shared"))
         return p
 
     def _route(self, params, x_flat):

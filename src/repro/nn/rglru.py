@@ -65,7 +65,8 @@ class RGLRUBlock(Module):
         return {
             "in_x": mk("in_x", self.d_model, self.d_rnn),
             "in_gate": mk("in_gate", self.d_model, self.d_rnn),
-            "conv_w": (jax.random.normal(named_key(key, "conv_w"), (self.conv_width, self.d_rnn)) * 0.1).astype(self.dtype),
+            "conv_w": (jax.random.normal(named_key(key, "conv_w"),
+                                         (self.conv_width, self.d_rnn)) * 0.1).astype(self.dtype),
             "conv_b": jnp.zeros((self.d_rnn,), self.dtype),
             "w_a": mk("w_a", self.d_rnn, self.d_rnn),
             "w_i": mk("w_i", self.d_rnn, self.d_rnn),

@@ -67,21 +67,27 @@ class Mamba2Block(Module):
         h = self.n_heads
         if self.split_proj:
             p = {
-                "in_z": Linear(self.d_model, self.d_inner, dtype=self.dtype).init(named_key(key, "in_z")),
-                "in_xbc": Linear(self.d_model, self.conv_dim, dtype=self.dtype).init(named_key(key, "in_xbc")),
+                "in_z": Linear(self.d_model, self.d_inner,
+                               dtype=self.dtype).init(named_key(key, "in_z")),
+                "in_xbc": Linear(self.d_model, self.conv_dim,
+                                 dtype=self.dtype).init(named_key(key, "in_xbc")),
                 "in_dt": Linear(self.d_model, h, dtype=self.dtype).init(named_key(key, "in_dt")),
             }
         else:
             d_in_proj = 2 * self.d_inner + 2 * self.n_groups * self.d_state + h
-            p = {"in_proj": Linear(self.d_model, d_in_proj, dtype=self.dtype).init(named_key(key, "in_proj"))}
+            p = {"in_proj": Linear(self.d_model, d_in_proj,
+                                   dtype=self.dtype).init(named_key(key, "in_proj"))}
         p.update({
-            "conv_w": (jax.random.normal(named_key(key, "conv_w"), (self.conv_width, self.conv_dim)) * 0.1).astype(self.dtype),
+            "conv_w": (0.1 * jax.random.normal(
+                named_key(key, "conv_w"),
+                (self.conv_width, self.conv_dim))).astype(self.dtype),
             "conv_b": jnp.zeros((self.conv_dim,), self.dtype),
             "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(self.dtype),
             "D": jnp.ones((h,), self.dtype),
             "dt_bias": jnp.zeros((h,), self.dtype),
             "norm_scale": jnp.ones((self.d_inner,), self.dtype),
-            "out_proj": Linear(self.d_inner, self.d_model, dtype=self.dtype).init(named_key(key, "out_proj")),
+            "out_proj": Linear(self.d_inner, self.d_model,
+                               dtype=self.dtype).init(named_key(key, "out_proj")),
         })
         return p
 
@@ -102,7 +108,8 @@ class Mamba2Block(Module):
         z, xBC, dt_raw = self._project_in(params, u)
         xBC = jax.nn.silu(causal_conv1d(xBC, params["conv_w"], params["conv_b"]))
         x, bmat, cmat = jnp.split(xBC, [self.d_inner, self.d_inner + gn], axis=-1)
-        dt = _softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+        dt = _softplus(dt_raw.astype(jnp.float32)
+                       + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
         return z, x, bmat, cmat, dt
 
     def __call__(self, params, u):
@@ -185,14 +192,16 @@ class Mamba2Block(Module):
         xBC = jnp.einsum("bkc,kc->bc", win, params["conv_w"]) + params["conv_b"]
         xBC = jax.nn.silu(xBC)[:, None, :]
         x, bmat, cmat = jnp.split(xBC, [self.d_inner, self.d_inner + gn], axis=-1)
-        dt = _softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+        dt = _softplus(dt_raw.astype(jnp.float32)
+                       + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
         x = x.reshape(bsz, hn, pd).astype(jnp.float32)
         rep = hn // self.n_groups
         bh = jnp.repeat(bmat.reshape(bsz, self.n_groups, nst), rep, axis=1).astype(jnp.float32)
         chh = jnp.repeat(cmat.reshape(bsz, self.n_groups, nst), rep, axis=1).astype(jnp.float32)
         a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))
         dec = jnp.exp(dt * a_neg)  # (B,H)
-        s_new = cache["ssm"] * dec[:, :, None, None] + jnp.einsum("bhn,bhp->bhnp", bh * dt[..., None], x)
+        s_new = (cache["ssm"] * dec[:, :, None, None]
+                 + jnp.einsum("bhn,bhp->bhnp", bh * dt[..., None], x))
         y = jnp.einsum("bhn,bhnp->bhp", chh, s_new)
         y = y + params["D"].astype(jnp.float32)[None, :, None] * x
         y = y.reshape(bsz, 1, self.d_inner)

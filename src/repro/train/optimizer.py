@@ -101,7 +101,8 @@ class AdamW:
             vh = v_new / c2
             d = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
             p_new = p.astype(jnp.float32) - lr * d
-            return p_new.astype(p.dtype), m_new.astype(self.state_dtype), v_new.astype(self.state_dtype)
+            return (p_new.astype(p.dtype), m_new.astype(self.state_dtype),
+                    v_new.astype(self.state_dtype))
 
         flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
         leaf = lambda x: isinstance(x, tuple)

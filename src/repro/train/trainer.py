@@ -15,6 +15,16 @@ training up to float reduction order (tests/test_data_parallel.py).
 Microbatch accumulation composes: the global batch is split over devices
 first, microbatches second.
 
+Hardware-in-the-loop contract: when the photonic backend consumes device
+state (``PhotonicBackend.stateful_hardware``, e.g. the "emu" MRR emulation)
+the Trainer carries a per-ring hardware pytree in ``state["hw"]`` —
+resonance drift (OU process) plus the controller's calibration estimate.
+Each step advances it (``repro.hardware.calibrate.advance``; recalibration
+sweeps every ``TrainerConfig.recalibrate_every`` steps) and exposes it to
+the projection via ``repro.hardware.drift.use_state``, all inside the same
+jitted step — so long runs degrade (and recover) realistically, and the
+state checkpoints/replicates/donates like any other training state.
+
 Fault-tolerance contract: all training randomness (photonic noise, data
 order) is a pure function of (seed, step), so `restore()` + `fit()` replays
 identically after a crash — verified by tests/test_checkpoint.py.
@@ -33,8 +43,11 @@ import jax.numpy as jnp
 
 from repro import algos
 from repro.algos.dfa import DFAConfig
+from repro.core import photonics
 from repro.data.pipeline import DevicePrefetcher
 from repro.dist import sharding
+from repro.hardware import calibrate as hw_calibrate
+from repro.hardware import drift as hw_drift
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import SGDM
 from repro.utils import prng
@@ -53,6 +66,10 @@ class TrainerConfig:
     data_parallel: bool | str = "auto"
     # host->device pipeline depth for fit's input feeding (0 disables).
     prefetch: int = 2
+    # in-situ calibration cadence for stateful photonic hardware (the "emu"
+    # backend): a calibration sweep re-measures per-ring drift every this
+    # many steps (0 = never — drift accumulates uncompensated).
+    recalibrate_every: int = 0
     ckpt_dir: str | None = None
     ckpt_every: int = 500
     keep_ckpts: int = 3
@@ -89,6 +106,10 @@ class Trainer:
             from repro.launch.mesh import make_data_mesh
 
             self.mesh = make_data_mesh()
+        # stateful photonic hardware (drift + calibration): only backends
+        # that consume device state get a carried "hw" pytree
+        self._hw_stateful = photonics.get_backend(
+            cfg.dfa.backend).stateful_hardware
         # step() keeps a non-donating jit — callers re-use the state they
         # pass in (metrics probes, tests); fit() owns its carried state and
         # donates it so XLA updates parameters in place.
@@ -109,8 +130,12 @@ class Trainer:
         fb = self.algorithm.init_extra_state(
             self.model, prng.fold_name(key, "feedback"), self.cfg.dfa)
         opt_state = self.cfg.optimizer.init(params)
-        return {"params": params, "fb": fb, "opt": opt_state,
-                "step": jnp.zeros((), jnp.int32)}
+        state = {"params": params, "fb": fb, "opt": opt_state,
+                 "step": jnp.zeros((), jnp.int32)}
+        if self._hw_stateful:
+            state["hw"] = hw_drift.init_state(
+                self.cfg.dfa.photonics, prng.fold_name(key, "hardware"))
+        return state
 
     # ---------- core step ----------
     def _grads(self, params, fb, batch, rng):
@@ -144,13 +169,30 @@ class Trainer:
 
     def _train_step(self, state, batch):
         rng = prng.step_key(self.cfg.seed, state["step"], "noise")
-        (loss, metrics), grads = self._grads(state["params"], state["fb"], batch, rng)
+        hw = state.get("hw")
+        if hw is not None:
+            # advance the physical device (drift + calibration sweeps) and
+            # expose it to the photonic projections inside this trace
+            hw = hw_calibrate.advance(
+                hw, self.cfg.dfa.photonics, state["step"],
+                prng.step_key(self.cfg.seed, state["step"], "hardware"),
+                recalibrate_every=self.cfg.recalibrate_every)
+            hw_ctx = hw_drift.use_state(hw)
+        else:
+            hw_ctx = contextlib.nullcontext()
+        with hw_ctx:
+            (loss, metrics), grads = self._grads(state["params"], state["fb"], batch, rng)
         new_params, new_opt, info = self.cfg.optimizer.update(
             grads, state["opt"], state["params"])
         metrics = dict(metrics)
         metrics.update(info)
         new_state = {"params": new_params, "fb": state["fb"], "opt": new_opt,
                      "step": state["step"] + 1}
+        if hw is not None:
+            new_state["hw"] = hw
+            metrics["hw_drift_rms"] = jnp.sqrt(jnp.mean(jnp.square(hw["drift"])))
+            metrics["hw_residual_rms"] = jnp.sqrt(
+                jnp.mean(jnp.square(hw_drift.residual(hw))))
         return new_state, metrics
 
     def _dispatch(self, state, batch, step_fn):

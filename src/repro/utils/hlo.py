@@ -131,7 +131,9 @@ def count_op(hlo_text: str, op_name: str) -> int:
     """Count occurrences of an HLO op (e.g. 'dot', 'fusion') by kind."""
     n = 0
     for line in hlo_text.splitlines():
-        m = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z0-9-]+)\(", line)
+        m = re.search(
+            r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z0-9-]+)\(",
+            line)
         if m and m.group(1) == op_name:
             n += 1
     return n

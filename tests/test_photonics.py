@@ -19,6 +19,31 @@ def test_effective_bits_match_paper():
         assert abs(photonics.std_to_bits(photonics.bits_to_std(bits)) - bits) < 1e-9
 
 
+@hypothesis.given(bits=st.floats(0.25, 40.0))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_resolution_sigma_round_trip_is_exact(bits):
+    """resolution_to_sigma / sigma_to_resolution are inverses to float
+    precision (computed via 1 - log2(σ), no division rounding) — and
+    PhotonicConfig.effective_bits is the same function."""
+    sigma = photonics.resolution_to_sigma(bits)
+    assert abs(photonics.sigma_to_resolution(sigma) - bits) < 1e-9
+    cfg = photonics.PhotonicConfig(noise_std=sigma)
+    assert abs(cfg.effective_bits - bits) < 1e-9
+
+
+@hypothesis.given(sigma=st.floats(1e-9, 2.0))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_sigma_resolution_round_trip_is_exact(sigma):
+    bits = photonics.sigma_to_resolution(sigma)
+    back = photonics.resolution_to_sigma(bits)
+    assert abs(back - sigma) <= 1e-12 * sigma
+
+
+def test_resolution_degenerate_cases():
+    assert photonics.sigma_to_resolution(0.0) == float("inf")
+    assert photonics.PhotonicConfig(noise_std=0.0).effective_bits == float("inf")
+
+
 def test_gemm_cycles_paper_mlp():
     """800×10 matvec on the 50×20 bank: ceil(800/50)·ceil(10/20) = 16."""
     cfg = photonics.PhotonicConfig()
