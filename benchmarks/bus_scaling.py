@@ -1,0 +1,130 @@
+"""Multi-wavelength bus scale-out study: accuracy, GeMM schedule length,
+and energy per MAC versus the number of parallel WDM buses.
+
+The paper's throughput story (Eqs. 2-4, §5) scales by adding buses that
+carry more MRR weight banks; this sweep prices that axis end to end:
+
+* accuracy  — a short MNIST DFA fit through the device-level "emu"
+  backend at each bus count, with inter-bus thermal crosstalk ON (the
+  scale-out's own nonideality).  Buses don't change the math, so the
+  accuracy column should be ~flat — any spread is crosstalk/quantization.
+* cycles    — ``photonics.gemm_cycles`` schedule length of a
+  representative LM feedback projection (d_model-sized taps, where the
+  contraction is deep enough for buses to matter; the paper's MNIST MLP
+  taps only 10 wide — one panel — so buses can't help it).
+* pJ/MAC    — ``energy.dfa_backward_cost`` with the per-bus Eq. 4 power
+  terms: flat up to schedule-quantization loss (idle buses in the last
+  cycle still burn power).
+
+Emits ``BENCH_bus_scaling.json`` (schema repro.bench/v1);
+``benchmarks/run.py --bench`` runs this sweep and CI requires the file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro import api
+from repro.core import energy, photonics
+from repro.data import mnist, pipeline
+from repro.hardware.mrr import MRRConfig
+from repro.models.mlp import MLPClassifier
+from repro.train import SGDM
+
+# Accuracy cell device: measured off-chip BPD noise, realistic heater/ADC
+# DACs, intra-bus AND inter-bus thermal crosstalk; drift OFF so the sweep
+# isolates the bus axis (the drift story is BENCH_hardware.json).
+BUS_DEVICE = dict(adc_bits=10, bus_crosstalk=0.002, drift_sigma=0.0,
+                  cal_noise=0.0)
+
+# Representative deep-contraction projection for the cycles/energy columns:
+# qwen1.5-0.5b-shaped feedback (24 layers, d_model = d_tap = 896) — 45
+# contraction panels on the 50×20 bank, so bus-parallel scheduling bites.
+LM_LAYERS = [896] * 24
+LM_D_TAP = 896
+
+
+def schedule_row(n_buses: int, bank=(50, 20)) -> dict:
+    """Cycles/energy/TOPS of the LM feedback backward at one bus count."""
+    m, n = bank
+    ecfg = energy.EnergyConfig(n_buses=n_buses)
+    r = energy.dfa_backward_cost(LM_LAYERS, LM_D_TAP, ecfg, bank_m=m, bank_n=n)
+    pcfg = photonics.PhotonicConfig(bank_rows=m, bank_cols=n, n_buses=n_buses)
+    assert r["cycles"] == sum(
+        photonics.gemm_cycles(d, LM_D_TAP, pcfg) for d in LM_LAYERS)
+    return {"cycles": r["cycles"], "seconds": r["seconds"],
+            "pj_per_mac": r["pj_per_mac"], "tops": r["tops"]}
+
+
+def run(bus_counts=(1, 2, 4), steps: int = 96, train_n: int = 2048,
+        test_n: int = 512, batch: int = 64, hidden=(64,), seed: int = 0):
+    data = mnist.load((train_n, test_n), seed=seed)
+    xtr, ytr = data["train"]
+    xte, yte = data["test"]
+    base = dataclasses.replace(photonics.preset("offchip_bpd"),
+                               mrr=MRRConfig(**BUS_DEVICE))
+    rows = []
+    for n_buses in bus_counts:
+        pipe = pipeline.ArrayClassification(xtr, ytr, batch_size=batch,
+                                            seed=seed)
+        session = api.build_session(
+            arch=MLPClassifier(hidden=hidden), algo="dfa", hardware=base,
+            backend="emu", n_buses=n_buses,
+            optimizer=SGDM(lr=0.01, momentum=0.9), seed=seed,
+            log_every=10**9)
+        state, _ = session.fit(pipe.batch, total_steps=steps, verbose=False)
+        ev = session.evaluate(
+            state, pipe.eval_batches(xte, yte, min(256, len(xte))))
+        rows.append({"n_buses": n_buses,
+                     "test_accuracy": 100 * ev["accuracy"],
+                     "source": data["source"], **schedule_row(n_buses)})
+    return rows
+
+
+def bench_metrics(rows) -> dict:
+    by_bus = {r["n_buses"]: r for r in rows}
+    metrics = {}
+    for b, r in sorted(by_bus.items()):
+        metrics[f"acc_b{b}"] = r["test_accuracy"]
+        metrics[f"cycles_b{b}"] = r["cycles"]
+        metrics[f"pj_per_mac_b{b}"] = r["pj_per_mac"]
+        metrics[f"tops_b{b}"] = r["tops"]
+    b_lo, b_hi = min(by_bus), max(by_bus)
+    accs = [r["test_accuracy"] for r in rows]
+    # headline: schedule speedup at the largest bus count, and how much
+    # accuracy the scale-out costs (should be ~0: buses change scheduling
+    # and crosstalk geometry, not the math)
+    metrics["cycle_speedup"] = by_bus[b_lo]["cycles"] / by_bus[b_hi]["cycles"]
+    metrics["acc_spread_pts"] = max(accs) - min(accs)
+    return metrics
+
+
+def write_report(rows, out_dir: str = ".") -> str:
+    from repro.bench import write_bench
+
+    return write_bench("bus_scaling", bench_metrics(rows),
+                       meta={"rows": rows, "device": BUS_DEVICE,
+                             "lm_layers": len(LM_LAYERS),
+                             "lm_d_tap": LM_D_TAP},
+                       out_dir=out_dir)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=96)
+    ap.add_argument("--buses", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--bench-dir", default=None, metavar="DIR",
+                    help="also write BENCH_bus_scaling.json into DIR")
+    args = ap.parse_args()
+    print("bus_scaling: n_buses,test_acc_%,cycles,pj_per_mac,tops")
+    rows = run(bus_counts=tuple(args.buses), steps=args.steps)
+    for r in rows:
+        print(f"{r['n_buses']},{r['test_accuracy']:.2f},{r['cycles']},"
+              f"{r['pj_per_mac']:.3f},{r['tops']:.2f}")
+    if args.bench_dir is not None:
+        print(f"[bench] wrote {write_report(rows, args.bench_dir)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,9 +24,10 @@ nonzero when any of them fails.
 ``--bench`` measures training throughput (repro.bench.StepTimer over a
 data-parallel ``Session.fit``) and writes ``BENCH_train_throughput.json``
 plus the drift/recalibration study (``benchmarks.drift_recovery``) as
-``BENCH_hardware.json``; combined with ``--smoke`` it also writes
-``BENCH_smoke.json``.  CI archives the ``BENCH_*.json`` files — they are
-the repo's perf trajectory.
+``BENCH_hardware.json`` and the multi-wavelength scale-out sweep
+(``benchmarks.bus_scaling``) as ``BENCH_bus_scaling.json``; combined with
+``--smoke`` it also writes ``BENCH_smoke.json``.  CI archives the
+``BENCH_*.json`` files — they are the repo's perf trajectory.
 """
 
 from __future__ import annotations
@@ -152,6 +153,19 @@ def tab_roofline():
                    worst["compute_fraction"], worst["arch"], worst["shape"]))
 
 
+def tab_bus_scaling():
+    from benchmarks.bus_scaling import bench_metrics, run
+
+    us, rows = _timed(lambda: run(steps=64))
+    m = bench_metrics(rows)
+    return us, ("%d-bus LM backward: %.1fx cycle speedup, acc spread "
+                "%.2fpts, pJ/MAC %.2f->%.2f"
+                % (max(r["n_buses"] for r in rows), m["cycle_speedup"],
+                   m["acc_spread_pts"],
+                   m[f"pj_per_mac_b{min(r['n_buses'] for r in rows)}"],
+                   m[f"pj_per_mac_b{max(r['n_buses'] for r in rows)}"]))
+
+
 def tab_drift_recovery():
     from benchmarks.drift_recovery import bench_metrics, run
 
@@ -172,6 +186,7 @@ TABLES = [
     ("tab_dfa_vs_bp", tab_dfa_vs_bp),
     ("tab_ternary_error", tab_ternary_error),
     ("tab_dfa_pipeline_latency", tab_dfa_pipeline_latency),
+    ("tab_bus_scaling", tab_bus_scaling),
     ("tab_drift_recovery", tab_drift_recovery),
     ("tab_roofline", tab_roofline),
 ]
@@ -286,6 +301,16 @@ def bench_hardware(out_dir: str = ".", steps: int = 192) -> str:
     return path
 
 
+def bench_bus_scaling(out_dir: str = ".", steps: int = 96) -> str:
+    """Run the multi-wavelength scale-out sweep and write
+    BENCH_bus_scaling.json (accuracy / cycles / pJ-per-MAC vs bus count)."""
+    bs = _sibling("bus_scaling")
+
+    path = bs.write_report(bs.run(steps=steps), out_dir)
+    print(f"[bench] wrote {path}", flush=True)
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -299,6 +324,8 @@ def main() -> None:
     ap.add_argument("--bench-algo", default="dfa")
     ap.add_argument("--hardware-steps", type=int, default=192,
                     help="training steps per drift_recovery variant")
+    ap.add_argument("--bus-steps", type=int, default=96,
+                    help="training steps per bus_scaling cell")
     args = ap.parse_args()
     if args.smoke:
         failures = smoke(bench_dir=args.bench_dir if args.bench else None)
@@ -309,6 +336,7 @@ def main() -> None:
         bench_throughput(out_dir=args.bench_dir, steps=args.bench_steps,
                          batch=args.bench_batch, algo=args.bench_algo)
         bench_hardware(out_dir=args.bench_dir, steps=args.hardware_steps)
+        bench_bus_scaling(out_dir=args.bench_dir, steps=args.bus_steps)
         return
     print("name,us_per_call,derived")
     for name, fn in TABLES:

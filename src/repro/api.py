@@ -118,6 +118,7 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
                   smoke: bool = False, dtype=jnp.float32,
                   error_compress: str = "none", freeze_norms: bool = False,
                   feedback: fb_lib.FeedbackConfig | None = None,
+                  n_buses: int | None = None,
                   microbatches: int = 1,
                   data_parallel: bool | str = "auto", prefetch: int = 2,
                   recalibrate_every: int | None = None,
@@ -130,6 +131,9 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
     algorithm = algos.get(algo)             # fail fast on unknown names
     backend_obj = photonics.get_backend(backend)  # (likewise for the backend)
     hw_cfg = resolve_hardware(hardware)
+    if n_buses is not None:
+        # multi-wavelength scale-out: override the preset's bus count
+        hw_cfg = dataclasses.replace(hw_cfg, n_buses=n_buses)
     if backend_obj.stateful_hardware and hw_cfg.mrr is None:
         # device-level backend with an abstract hardware preset: attach the
         # default device description (drift ON) so the emulation has a bank

@@ -13,7 +13,6 @@ execution path (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
-import math
 
 # --- physical constants ---
 H_BAR_OMEGA_1550NM = 1.281e-19  # photon energy at 1550 nm [J]
@@ -23,6 +22,10 @@ ELEMENTARY_CHARGE = 1.602e-19  # [C]
 @dataclasses.dataclass(frozen=True)
 class EnergyConfig:
     f_s: float = 10e9  # operational rate [Hz] (DAC-throughput limited)
+    # parallel WDM buses, each a full M×N bank with its own lasers, DACs,
+    # TIAs and ADCs (Eq. 4 per-bus terms); throughput (Eq. 2) scales with
+    # the bus count while E_op stays flat up to schedule-quantization loss
+    n_buses: int = 1
     n_bits: int = 6  # fixed-point precision N_b
     eta: float = 0.2  # laser+detector+waveguide efficiency
     c_pd: float = 2.4e-15  # photodetector capacitance [F]
@@ -46,8 +49,9 @@ class EnergyConfig:
 
 
 def ops_per_second(m: int, n: int, cfg: EnergyConfig) -> float:
-    """Eq. (2):  OPS = 2 f_s M N."""
-    return 2.0 * cfg.f_s * m * n
+    """Eq. (2):  OPS = 2 f_s M N B — the B parallel buses each complete an
+    M×N panel per operational cycle."""
+    return 2.0 * cfg.f_s * m * n * cfg.n_buses
 
 
 def laser_power(m: int, cfg: EnergyConfig) -> float:
@@ -58,13 +62,17 @@ def laser_power(m: int, cfg: EnergyConfig) -> float:
 
 
 def total_power(m: int, n: int, cfg: EnergyConfig) -> float:
-    """Eq. (4): wall-plug power of an M×N weight bank circuit."""
-    return (
+    """Eq. (4): wall-plug power of an M×N weight bank circuit, times the
+    ``n_buses`` parallel copies — every term is per-bus (each bus carries
+    its own N lasers and input DACs, N·(M+1) tuned rings, and M TIA/ADC
+    readout chains)."""
+    per_bus = (
         n * laser_power(m, cfg)
         + n * (m + 1) * cfg.p_mrr
         + n * cfg.p_dac
         + m * (cfg.p_tia + cfg.p_adc)
     )
+    return cfg.n_buses * per_bus
 
 
 def energy_per_op(m: int, n: int, cfg: EnergyConfig) -> float:
@@ -112,14 +120,19 @@ def fig6_curve(cfg: EnergyConfig, cells=None):
 def dfa_backward_cost(layer_dims, d_tap: int, cfg: EnergyConfig,
                       bank_m: int = 50, bank_n: int = 20):
     """Cycles/energy/time for one DFA backward pass (all B(k)·e products)
-    executed on one M×N bank via the GeMM compiler — the paper's unit of
-    work.  layer_dims: injection dims per hidden layer."""
+    executed on ``cfg.n_buses`` M×N banks via the GeMM compiler — the
+    paper's unit of work.  layer_dims: injection dims per hidden layer.
+    The schedule length comes from ``photonics.gemm_cycles`` (the single
+    source of the tiling math — this used to re-implement it inline and
+    would have silently disagreed once buses landed)."""
+    from repro.core import photonics
+
+    pcfg = photonics.PhotonicConfig(bank_rows=bank_m, bank_cols=bank_n,
+                                    n_buses=cfg.n_buses)
     total_cycles = 0
     total_macs = 0
     for d in layer_dims:
-        rows = math.ceil(d / bank_m)
-        cols = math.ceil(d_tap / bank_n)
-        total_cycles += rows * cols
+        total_cycles += photonics.gemm_cycles(d, d_tap, pcfg)
         total_macs += d * d_tap
     seconds = total_cycles / cfg.f_s
     energy = total_power(bank_m, bank_n, cfg) * seconds

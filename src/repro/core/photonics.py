@@ -47,6 +47,12 @@ from repro.hardware.mrr import MRRConfig
 class PhotonicConfig:
     bank_rows: int = 50  # M — rows of MRR arrays (paper headline bank 50×20)
     bank_cols: int = 20  # N — WDM channels per waveguide bus
+    # Parallel WDM buses (paper §5 scale-out): each bus is a full physical
+    # bank (rows×cols rings) with its own modulator/DAC and BPD/ADC chain.
+    # The GeMM compiler schedules contraction panels across buses in the
+    # same operational cycle, so throughput scales ~linearly while the
+    # accumulated noise per output (one draw per *panel*) is unchanged.
+    n_buses: int = 1
     noise_std: float = 0.0  # per-bank-pass Gaussian σ (0 = ideal hardware)
     noise_convention: str = "absolute"  # absolute | fullscale
     weight_bits: int | None = None  # fake-quant of inscribed MRR weights
@@ -110,31 +116,48 @@ def std_to_bits(std: float) -> float:
 
 
 def fake_quant(x, bits: int | None, amax=None):
-    """Symmetric fake quantisation to ``bits`` over [-amax, amax]."""
+    """Symmetric fake quantisation to ``bits`` over [-amax, amax].
+
+    ``bits=1`` clamps to ternary/sign semantics ({-amax, 0, +amax}, the
+    same grid as ``bits=2``): the naive symmetric formula has zero levels
+    at one bit and used to return NaN."""
     if bits is None:
         return x
     if amax is None:
         amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
-    levels = 2 ** (bits - 1) - 1
+    levels = max(2 ** (bits - 1) - 1, 1)
     scaled = jnp.clip(x / amax, -1.0, 1.0) * levels
     return jnp.round(scaled) / levels * amax
 
 
-def n_bank_passes(k_dim: int, cfg: PhotonicConfig) -> int:
-    """Cycles along the contraction dim (GeMM compiler N-tiling)."""
+def n_contraction_panels(k_dim: int, cfg: PhotonicConfig) -> int:
+    """Bank-sized panels along the contraction dim (GeMM compiler
+    N-tiling) — the number of partial products *accumulated* per output,
+    i.e. the noise-relevant count, independent of how many buses execute
+    them in parallel."""
     return max(1, math.ceil(k_dim / cfg.bank_cols))
+
+
+def n_bank_passes(k_dim: int, cfg: PhotonicConfig) -> int:
+    """Operational cycles along the contraction dim: the ``n_buses``
+    parallel banks each take one panel per cycle, so the schedule length
+    is ⌈panels / n_buses⌉ (== panels on a single bus)."""
+    return math.ceil(n_contraction_panels(k_dim, cfg) / max(cfg.n_buses, 1))
 
 
 def gemm_cycles(m: int, k: int, cfg: PhotonicConfig) -> int:
     """Total operational cycles for an (m×k)·(k,) matvec on the bank —
-    the GeMM compiler's schedule length (paper §3)."""
+    the GeMM compiler's schedule length (paper §3), contraction panels
+    bus-parallel per ``cfg.n_buses``."""
     return max(1, math.ceil(m / cfg.bank_rows)) * n_bank_passes(k, cfg)
 
 
 def noise_sigma_total(k_dim: int, s_a, s_b, cfg: PhotonicConfig):
     """Std of the accumulated output noise for a length-k inner product,
-    in natural (unnormalised) units."""
-    passes = n_bank_passes(k_dim, cfg)
+    in natural (unnormalised) units.  Every contraction panel contributes
+    one BPD read regardless of which bus ran it, so this counts panels,
+    not bus-parallel cycles."""
+    passes = n_contraction_panels(k_dim, cfg)
     if cfg.noise_convention == "absolute":
         per_pass = cfg.noise_std * s_a * s_b
     elif cfg.noise_convention == "fullscale":

@@ -5,7 +5,8 @@ Layout (one concern per module):
 * ``mrr``       — Lorentzian ring transfer, weight→heater inscription,
   thermal-crosstalk geometry, and the ``MRRConfig`` device description
 * ``channel``   — the composable signal chain (DAC → modulator → ring bank
-  → balanced photodetector → ADC), tiled over bank panels; the "emu"
+  → balanced photodetector → ADC), tiled over bank panels and scheduled
+  across the parallel WDM buses (``PhotonicConfig.n_buses``); the "emu"
   ``PhotonicBackend`` calls ``channel.emulated_matmul``
 * ``drift``     — stateful per-ring resonance drift (OU process) + the
   context that threads the Trainer's carried hardware state into the chain

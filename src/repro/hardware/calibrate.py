@@ -30,33 +30,38 @@ from repro.hardware import mrr
 
 def quantize_command(delta_cmd, cfg: mrr.MRRConfig):
     """Heater-DAC quantization: the commanded detuning is driven through a
-    ``heater_bits``-deep DAC spanning [0, delta_max]."""
+    ``heater_bits``-deep DAC spanning [0, delta_max].  ``heater_bits=1``
+    clamps to a single on/off level ({0, delta_max}) instead of a
+    zero-level division (the same degenerate-bits guard as
+    ``photonics.fake_quant``)."""
     if cfg.heater_bits is None:
         return delta_cmd
-    levels = 2**cfg.heater_bits - 1
+    levels = max(2**cfg.heater_bits - 1, 1)
     d = jnp.clip(delta_cmd / cfg.delta_max, 0.0, 1.0) * levels
     return jnp.round(d) / levels * cfg.delta_max
 
 
 def compensate_crosstalk(delta_target, cfg: mrr.MRRConfig, row_axis: int | None = None,
-                         col_axis: int | None = None):
+                         col_axis: int | None = None, bus_axis: int | None = None):
     """Solve (I + c·N)·δ_cmd = δ_target by Jacobi iteration so that after
     the physical leak the realized detuning is ≈ the target.  Converges
-    geometrically for c·‖N‖ < 1 (c is a few 1e-3; ‖N‖ ≤ 4)."""
+    geometrically for c·‖N‖ < 1 (c is a few 1e-3; ‖N‖ ≤ 4 intra-bus plus
+    2 inter-bus neighbours)."""
     delta_cmd = delta_target
     for _ in range(cfg.ct_iters):
         delta_cmd = delta_target - mrr.crosstalk_leak(
-            delta_cmd, cfg, row_axis, col_axis)
+            delta_cmd, cfg, row_axis, col_axis, bus_axis)
     return delta_cmd
 
 
 def command_deltas(w_target, cfg: mrr.MRRConfig, row_axis: int | None = None,
-                   col_axis: int | None = None):
+                   col_axis: int | None = None, bus_axis: int | None = None):
     """Target weights -> commanded heater detunings (the controller's whole
     write path: LUT inversion, crosstalk pre-inversion, heater DAC)."""
     delta = mrr.inscribe(w_target, cfg)
-    if cfg.crosstalk != 0.0 and cfg.compensate_crosstalk:
-        delta = compensate_crosstalk(delta, cfg, row_axis, col_axis)
+    if cfg.compensate_crosstalk and (
+            cfg.crosstalk != 0.0 or cfg.bus_crosstalk != 0.0):
+        delta = compensate_crosstalk(delta, cfg, row_axis, col_axis, bus_axis)
     delta = jnp.clip(delta, 0.0, cfg.delta_max)
     return quantize_command(delta, cfg)
 
@@ -86,6 +91,10 @@ def advance(state: dict, photonics_cfg, step, key,
     cal = state["cal"]
     if recalibrate_every and recalibrate_every > 0:
         fresh = measure(d, jax.random.fold_in(key, 2), cfg)
-        do_recal = (jnp.asarray(step) % recalibrate_every) == 0
+        step = jnp.asarray(step)
+        # skip step 0: a fresh chip is already calibrated (both grids zero),
+        # and a sweep before any drift exists would make the first
+        # recalibration window look like it recovered nothing
+        do_recal = ((step % recalibrate_every) == 0) & (step > 0)
         cal = jnp.where(do_recal, fresh, cal)
     return {"drift": d, "cal": cal}

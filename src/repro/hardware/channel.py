@@ -8,9 +8,13 @@ into the photonic [-1, 1] range plus the input/weight fake-quant), so the
 backends unchanged.  What differs is everything between encode and rescale:
 
 1.  The GeMM compiler's tiling (paper §3): A:(T,K)·B:(M,K)ᵀ is split into
-    ⌈M/bank_rows⌉ × ⌈K/bank_cols⌉ panels, each one operational pass of the
-    SAME physical bank — so the per-ring drift/crosstalk state has shape
-    (bank_rows, bank_cols) and is shared across panels.
+    ⌈M/bank_rows⌉ × ⌈K/bank_cols⌉ panels.  With ``cfg.n_buses`` WDM buses
+    the contraction panels are scheduled round-robin across the buses —
+    each bus is a full physical (rows, cols) bank with its own
+    modulator/DAC and BPD/ADC chain, so ⌈panels / n_buses⌉ parallel
+    cycles replace the single-bus panel sequence.  Per-ring
+    drift/crosstalk state has shape (n_buses, bank_rows, bank_cols) and
+    is shared across the panels each bus executes.
 2.  Weight inscription (``calibrate.command_deltas``): Lorentzian LUT
     inversion, crosstalk pre-compensation, heater-DAC quantization.
 3.  The physical leak + drift residual perturb the commanded detunings;
@@ -52,36 +56,48 @@ def _pad_axis(x, mult: int, axis: int):
 
 
 def tile_operands(a_n, b_n, cfg):
-    """Split normalised operands into bank-sized panels.
+    """Split normalised operands into bank-sized panels scheduled across
+    the ``cfg.n_buses`` parallel buses.
 
-    a_n: (T, K) -> (T, nk, cols);  b_n: (M, K) -> (nm, rows, nk, cols).
-    Zero padding is harmless: padded K columns multiply zero inputs and
-    padded M rows are sliced off the output.
+    a_n: (T, K) -> (T, n_buses, nj, cols);
+    b_n: (M, K) -> (nm, n_buses, rows, nj, cols);
+    returns (a_t, b_t, n_panels) where n_panels = ⌈K/cols⌉ is the number
+    of REAL contraction panels and nj = ⌈n_panels/n_buses⌉ the bus-cycle
+    count — panel p runs as cycle p // n_buses on bus p % n_buses.
+    Zero padding is harmless: padded K columns multiply zero inputs,
+    padded M rows are sliced off the output, and bus-padded panels (idle
+    buses in the last cycle) are noise-masked in ``bank_product``.
     """
     rows, cols = cfg.bank_rows, cfg.bank_cols
+    n_buses = max(cfg.n_buses, 1)
     t = a_n.shape[0]
     a_p = _pad_axis(a_n, cols, 1)
     nk = a_p.shape[1] // cols
-    a_t = a_p.reshape(t, nk, cols)
+    a_t = _pad_axis(a_p.reshape(t, nk, cols), n_buses, 1)
+    nj = a_t.shape[1] // n_buses
+    a_t = a_t.reshape(t, nj, n_buses, cols).transpose(0, 2, 1, 3)
     b_p = _pad_axis(_pad_axis(b_n, rows, 0), cols, 1)
     nm = b_p.shape[0] // rows
-    b_t = b_p.reshape(nm, rows, nk, cols)
-    return a_t, b_t
+    b_t = _pad_axis(b_p.reshape(nm, rows, nk, cols), n_buses, 2)
+    b_t = b_t.reshape(nm, rows, nj, n_buses, cols).transpose(0, 3, 1, 2, 4)
+    return a_t, b_t, nk
 
 
 def realized_weights(w_target, cfg, residual=None):
     """The full inscription path: targets -> commanded heaters -> physical
     detunings (leak + drift residual) -> realized Lorentzian weights.
 
-    ``w_target``: (..., rows, nk, cols) panel layout (or a bare
-    (rows, cols) grid); ``residual``: per-ring (rows, cols) detuning error
-    broadcast over panels.
+    ``w_target``: the bus-tiled (nm, n_buses, rows, nj, cols) layout, a
+    bus-free (..., rows, nk, cols) panel stack, or a bare (rows, cols)
+    grid; ``residual``: per-ring detuning error — (n_buses, rows, cols)
+    for the bus-tiled layout, (rows, cols) for bare grids — broadcast
+    over the (nm, nj) panel axes.
     """
     device = cfg.mrr or mrr.MRRConfig()
     delta_cmd = calibrate.command_deltas(w_target, device)
     delta_eff = delta_cmd + mrr.crosstalk_leak(delta_cmd, device)
     if residual is not None:
-        if w_target.ndim >= 3:  # panel layout: broadcast over (nm, nk)
+        if w_target.ndim >= 3:  # panel layout: broadcast over (nm, nj)
             delta_eff = delta_eff + residual[..., :, None, :]
         else:
             delta_eff = delta_eff + residual
@@ -106,11 +122,12 @@ def bank_product(a_n, b_n, cfg, key=None, *, residual=None):
     device = cfg.mrr or mrr.MRRConfig()
     t, _k = a_n.shape
     m = b_n.shape[0]
-    a_t, b_t = tile_operands(a_n, b_n, cfg)
+    a_t, b_t, n_panels = tile_operands(a_n, b_n, cfg)
     w_eff = realized_weights(b_t, cfg, residual)
-    # one einsum over all (nm, nk) panels: p[t, i, r, j] is the partial sum
-    # of output row block i, ring row r, contraction pass j
-    p = jnp.einsum("tjc,irjc->tirj", a_t, w_eff)
+    # one einsum over all (nm, bus, cycle) panels: p[t, i, r, q, j] is the
+    # partial sum of output row block i, ring row r, bus q, bus-cycle j
+    p = jnp.einsum("tqjc,iqrjc->tirqj", a_t, w_eff)
+    n_buses, nj = a_t.shape[1], a_t.shape[2]
     sigma = _per_pass_sigma(cfg)
     if sigma > 0.0 or device.shot_noise > 0.0:
         if key is None:
@@ -118,18 +135,27 @@ def bank_product(a_n, b_n, cfg, key=None, *, residual=None):
         k_th, k_sh = jax.random.split(key)
         noise = jnp.zeros_like(p)
         if sigma > 0.0:
+            # per-bus BPD/ADC chains: every (bus, cycle) element is an
+            # independent draw of the same per-pass read-noise floor
             noise += sigma * jax.random.normal(k_th, p.shape, p.dtype)
         if device.shot_noise > 0.0:
             # shot noise scales with the *clean* per-pass optical signal —
             # independent of (not seeded by) the thermal/read draw
             noise += (device.shot_noise * jnp.sqrt(jnp.abs(p))
                       * jax.random.normal(k_sh, p.shape, p.dtype))
+        if n_buses * nj != n_panels:
+            # idle buses in the last parallel cycle never fire their BPD —
+            # mask their draws so the accumulated noise counts the REAL
+            # panels (matching ref's single draw), not the padded schedule
+            valid = (jnp.arange(nj)[None, :] * n_buses
+                     + jnp.arange(n_buses)[:, None]) < n_panels
+            noise = noise * valid
         p = p + noise
     if device.adc_bits is not None:
-        # each pass is digitised before accumulating; ADC full scale is the
-        # bank's maximal inner product, ±bank_cols in normalised units
+        # each pass is digitised (per bus) before accumulating; ADC full
+        # scale is the bank's maximal inner product, ±bank_cols normalised
         p = photonics.fake_quant(p, device.adc_bits, amax=float(cfg.bank_cols))
-    out = jnp.sum(p, axis=-1)  # digital accumulation over contraction passes
+    out = jnp.sum(p, axis=(-2, -1))  # digital accumulation: buses × cycles
     return out.reshape(t, -1)[:, :m]
 
 

@@ -10,8 +10,8 @@ the per-ring detuning error as a discrete OU process
 whose stationary distribution is N(0, σ²) regardless of the step count —
 so long runs degrade realistically instead of diverging.  The state dict
 
-    {"drift": (bank_rows, bank_cols),   # actual detuning error, per ring
-     "cal":   (bank_rows, bank_cols)}   # controller's estimate at last sweep
+    {"drift": (n_buses, bank_rows, bank_cols),  # detuning error, per ring
+     "cal":   (n_buses, bank_rows, bank_cols)}  # estimate at last sweep
 
 is created by ``init_state`` (a freshly calibrated chip: both zero),
 advanced once per train step by ``repro.hardware.calibrate.advance``, and
@@ -39,9 +39,11 @@ import jax.numpy as jnp
 
 def init_state(cfg, key=None) -> dict:
     """Fresh hardware state for a ``PhotonicConfig``-shaped bank: a just-
-    calibrated chip (zero drift, zero stored estimate).  ``key`` is unused
+    calibrated chip (zero drift, zero stored estimate).  The leading axis
+    is the WDM bus — one physical (rows, cols) ring grid per bus, so the
+    carried state is (n_buses, bank_rows, bank_cols).  ``key`` is unused
     today but kept so a future warm-start draw stays call-compatible."""
-    shape = (cfg.bank_rows, cfg.bank_cols)
+    shape = (max(getattr(cfg, "n_buses", 1), 1), cfg.bank_rows, cfg.bank_cols)
     return {"drift": jnp.zeros(shape, jnp.float32),
             "cal": jnp.zeros(shape, jnp.float32)}
 

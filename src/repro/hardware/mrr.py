@@ -52,6 +52,10 @@ class MRRConfig:
     heater_bits: int | None = 12  # heater-DAC resolution over [0, delta_max]
     adc_bits: int | None = None  # per-pass output ADC (full scale = bank_cols)
     crosstalk: float = 0.005  # nearest-neighbour thermal coupling coefficient
+    # thermal coupling to the same (row, col) ring of the adjacent bus's
+    # bank — multi-bus layouts stack the banks, so each ring also sees its
+    # inter-bus neighbours (0 = buses thermally isolated)
+    bus_crosstalk: float = 0.0
     compensate_crosstalk: bool = True  # calibration pre-inverts the coupling
     ct_iters: int = 2  # Jacobi iterations of the crosstalk inversion
     shot_noise: float = 0.0  # signal-dependent BPD noise: σ·sqrt(|p|) per pass
@@ -105,10 +109,21 @@ def _shifted(x, axis: int, off: int):
 
 
 def grid_axes(x) -> tuple[int, int]:
-    """(row_axis, col_axis) of the physical ring grid for either supported
-    layout: a bare (rows, cols) grid, or the tiled (..., rows, nk, cols)
-    panel stack where a k-tile axis sits between rows and cols."""
+    """(row_axis, col_axis) of the physical ring grid for the supported
+    layouts: a bare (rows, cols) grid, the tiled (..., rows, nk, cols)
+    panel stack where a k-tile axis sits between rows and cols, or the
+    bus-stacked (..., n_buses, rows, nk, cols) layout — rows stay at -3
+    in every stacked form."""
     return ((-3, -1) if x.ndim >= 3 else (-2, -1))
+
+
+def bus_axis_of(x) -> int | None:
+    """The bus axis of a panel stack, or None when the layout carries no
+    bus dimension.  Only the full (nm, n_buses, rows, nk, cols) tiling
+    (ndim >= 5, bus axis at -4) is inferable — a 4-D stack is ambiguous
+    with the bus-free (nm, rows, nk, cols) layout, and bare
+    (n_buses, rows, cols) state grids must pass the axis explicitly."""
+    return -4 if x.ndim >= 5 else None
 
 
 def neighbor_sum(delta, row_axis: int | None = None, col_axis: int | None = None):
@@ -122,8 +137,20 @@ def neighbor_sum(delta, row_axis: int | None = None, col_axis: int | None = None
 
 
 def crosstalk_leak(delta_cmd, cfg: MRRConfig, row_axis: int | None = None,
-                   col_axis: int | None = None):
-    """Thermal power leaked into each ring by its grid neighbours."""
-    if cfg.crosstalk == 0.0:
+                   col_axis: int | None = None, bus_axis: int | None = None):
+    """Thermal power leaked into each ring by its neighbours: the intra-bus
+    (row, col) grid coupling plus — when the layout carries a bus axis —
+    the inter-bus coupling to the same ring position on adjacent banks."""
+    leak = None
+    if cfg.crosstalk != 0.0:
+        leak = cfg.crosstalk * neighbor_sum(delta_cmd, row_axis, col_axis)
+    if cfg.bus_crosstalk != 0.0:
+        if bus_axis is None:
+            bus_axis = bus_axis_of(delta_cmd)
+        if bus_axis is not None and delta_cmd.shape[bus_axis] > 1:
+            bus = cfg.bus_crosstalk * (_shifted(delta_cmd, bus_axis, 1)
+                                       + _shifted(delta_cmd, bus_axis, -1))
+            leak = bus if leak is None else leak + bus
+    if leak is None:
         return jnp.zeros_like(delta_cmd)
-    return cfg.crosstalk * neighbor_sum(delta_cmd, row_axis, col_axis)
+    return leak

@@ -58,6 +58,9 @@ def main():
     ap.add_argument("--recal-every", type=int, default=None,
                     help="in-situ recalibration cadence (steps) for stateful "
                          "emu hardware; default: 500 when the device drifts")
+    ap.add_argument("--n-buses", type=int, default=None,
+                    help="parallel WDM buses (multi-wavelength scale-out); "
+                         "default: the preset's bus count (1)")
     ap.add_argument("--bench-json", default=None, metavar="DIR",
                     help="measure throughput and write "
                          "BENCH_train_throughput.json into DIR")
@@ -76,6 +79,7 @@ def main():
         data_parallel={"auto": "auto", "on": True, "off": False}[args.data_parallel],
         prefetch=args.prefetch,
         recalibrate_every=args.recal_every,
+        n_buses=args.n_buses,
     )
     model = session.model
     if session.mesh is not None:

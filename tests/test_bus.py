@@ -1,0 +1,404 @@
+"""Multi-wavelength bus scale-out (PhotonicConfig.n_buses): scheduling
+math, single-bus bit-exactness with the PR 3 emu path, multi-bus ref
+equivalence, inter-bus crosstalk, bus-shaped drift state through the
+Trainer, the energy model's per-bus terms — plus the degenerate-bits
+fake-quant fixes and the step-0 recalibration skip."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import algos, api
+from repro.core import energy, photonics
+from repro.hardware import calibrate, channel, drift, mrr
+
+IDEAL = mrr.MRRConfig.ideal()
+
+
+# ---------------------------------------------------------------------------
+# degenerate-bits fake-quant (the NaN fix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [1, 2])
+def test_fake_quant_low_bits_finite_and_idempotent(bits):
+    """bits=1 used to divide by levels=0 and return NaN; both 1 and 2 bits
+    now quantise to the ternary grid {-amax, 0, +amax} and are idempotent."""
+    x = jnp.array([-1.7, -0.9, -0.2, 0.0, 0.3, 0.8, 1.7])
+    q = photonics.fake_quant(x, bits)
+    assert np.all(np.isfinite(np.asarray(q)))
+    amax = float(jnp.max(jnp.abs(x)))
+    assert set(np.round(np.unique(np.asarray(q)), 5)) <= {-amax, 0.0, amax}
+    np.testing.assert_array_equal(np.asarray(photonics.fake_quant(q, bits)),
+                                  np.asarray(q))
+
+
+def test_fake_quant_one_bit_through_error_compress_config():
+    """The Fig. 5 ablation path: a 1-bit input/weight encoding no longer
+    poisons the projection with NaN."""
+    cfg = photonics.PhotonicConfig(input_bits=1, weight_bits=1)
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (4, 12))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (6, 12))
+    out = photonics.photonic_matmul(a, b, cfg)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+@pytest.mark.parametrize("heater_bits", [0, 1])
+def test_quantize_command_degenerate_heater_bits(heater_bits):
+    """Same guard on the heater DAC: 1 bit means on/off {0, delta_max},
+    never a zero-level division."""
+    cfg = dataclasses.replace(IDEAL, heater_bits=heater_bits, delta_max=10.0)
+    d = calibrate.quantize_command(jnp.linspace(0.0, 10.0, 33), cfg)
+    assert np.all(np.isfinite(np.asarray(d)))
+    assert set(np.unique(np.asarray(d))) <= {0.0, 10.0}
+
+
+# ---------------------------------------------------------------------------
+# step-0 recalibration skip
+# ---------------------------------------------------------------------------
+
+def test_advance_skips_recalibration_at_step_zero():
+    cfg = photonics.PhotonicConfig(mrr=mrr.MRRConfig(
+        drift_sigma=0.5, drift_tau=10.0, cal_noise=0.0))
+    state = drift.init_state(cfg)
+    key = jax.random.PRNGKey(0)
+    s0 = calibrate.advance(state, cfg, 0, key, recalibrate_every=1)
+    # drift advanced, but a fresh chip is not re-swept before any history
+    assert float(jnp.abs(s0["drift"]).max()) > 0.0
+    np.testing.assert_array_equal(np.asarray(s0["cal"]),
+                                  np.zeros_like(s0["cal"]))
+    s1 = calibrate.advance(s0, cfg, 1, jax.random.fold_in(key, 1),
+                           recalibrate_every=1)
+    np.testing.assert_array_equal(np.asarray(s1["cal"]),
+                                  np.asarray(s1["drift"]))
+
+
+# ---------------------------------------------------------------------------
+# GeMM scheduling across buses
+# ---------------------------------------------------------------------------
+
+def test_bus_scheduling_divides_contraction_cycles():
+    cfg1 = photonics.PhotonicConfig()              # 50×20, 1 bus
+    cfg4 = dataclasses.replace(cfg1, n_buses=4)
+    assert photonics.n_contraction_panels(80, cfg4) == 4  # noise count
+    assert photonics.n_bank_passes(80, cfg1) == 4
+    assert photonics.n_bank_passes(80, cfg4) == 1          # 4 panels, 4 buses
+    assert photonics.n_bank_passes(100, cfg4) == 2         # 5 panels -> 2 cyc
+    assert photonics.gemm_cycles(800, 80, cfg1) == 64
+    assert photonics.gemm_cycles(800, 80, cfg4) == 16
+    # the paper's MLP tap is one panel: buses cannot help
+    assert photonics.gemm_cycles(800, 10, cfg4) == 16
+
+
+def test_noise_accumulation_is_bus_invariant():
+    """Every contraction panel fires one BPD read wherever it runs, so the
+    accumulated σ counts panels, not bus-parallel cycles."""
+    cfg1 = photonics.PhotonicConfig(noise_std=0.1)
+    cfg4 = dataclasses.replace(cfg1, n_buses=4)
+    assert photonics.noise_sigma_total(80, 1.0, 1.0, cfg1) == pytest.approx(
+        photonics.noise_sigma_total(80, 1.0, 1.0, cfg4))
+
+
+def test_energy_cost_routes_through_gemm_cycles():
+    """Satellite: dfa_backward_cost no longer re-implements the tiling —
+    its schedule length IS photonics.gemm_cycles, at every bus count."""
+    for n_buses in (1, 2, 3, 8):
+        ecfg = energy.EnergyConfig(n_buses=n_buses)
+        pcfg = photonics.PhotonicConfig(bank_rows=50, bank_cols=20,
+                                        n_buses=n_buses)
+        r = energy.dfa_backward_cost([800, 800, 333], 96, ecfg)
+        assert r["cycles"] == sum(
+            photonics.gemm_cycles(d, 96, pcfg) for d in [800, 800, 333])
+
+
+def test_energy_per_bus_terms():
+    """Eq. 2/4 with B buses: throughput and power both scale by B, so the
+    ideal (fully scheduled) E_op is bus-invariant."""
+    e1 = energy.EnergyConfig(n_buses=1)
+    e4 = energy.EnergyConfig(n_buses=4)
+    assert energy.ops_per_second(50, 20, e4) == pytest.approx(
+        4 * energy.ops_per_second(50, 20, e1))
+    assert energy.total_power(50, 20, e4) == pytest.approx(
+        4 * energy.total_power(50, 20, e1))
+    assert energy.energy_per_op(50, 20, e4) == pytest.approx(
+        energy.energy_per_op(50, 20, e1))
+    # a real schedule pays quantization: idle buses still burn power
+    r1 = energy.dfa_backward_cost([800] * 4, 896, e1)
+    r4 = energy.dfa_backward_cost([800] * 4, 896, e4)
+    assert r4["cycles"] < r1["cycles"]
+    assert r4["pj_per_mac"] >= r1["pj_per_mac"] * 0.999
+
+
+# ---------------------------------------------------------------------------
+# single-bus bit-exactness with the PR 3 emu path
+# ---------------------------------------------------------------------------
+
+def _legacy_bank_product(a_n, b_n, cfg, key=None, residual=None):
+    """Verbatim re-implementation of the pre-bus (PR 3) signal chain:
+    (T,K)x(M,K) tiled to (nm, rows, nk, cols) panels of ONE physical bank,
+    per-pass noise/ADC, digital accumulation over the contraction axis."""
+    device = cfg.mrr or mrr.MRRConfig()
+    t = a_n.shape[0]
+    m = b_n.shape[0]
+    rows, cols = cfg.bank_rows, cfg.bank_cols
+
+    def pad(x, mult, axis):
+        rem = (-x.shape[axis]) % mult
+        if rem == 0:
+            return x
+        width = [(0, 0)] * x.ndim
+        width[axis] = (0, rem)
+        return jnp.pad(x, width)
+
+    a_p = pad(a_n, cols, 1)
+    nk = a_p.shape[1] // cols
+    a_t = a_p.reshape(t, nk, cols)
+    b_p = pad(pad(b_n, rows, 0), cols, 1)
+    b_t = b_p.reshape(b_p.shape[0] // rows, rows, nk, cols)
+    delta_cmd = calibrate.command_deltas(b_t, device)
+    delta_eff = delta_cmd + mrr.crosstalk_leak(delta_cmd, device)
+    if residual is not None:
+        delta_eff = delta_eff + residual[..., :, None, :]
+    w_eff = mrr.ring_weight(delta_eff, device.gamma)
+    p = jnp.einsum("tjc,irjc->tirj", a_t, w_eff)
+    sigma = cfg.noise_std if cfg.noise_convention == "absolute" else \
+        cfg.noise_std * cfg.bank_cols
+    if sigma > 0.0 or device.shot_noise > 0.0:
+        k_th, k_sh = jax.random.split(key)
+        noise = jnp.zeros_like(p)
+        if sigma > 0.0:
+            noise += sigma * jax.random.normal(k_th, p.shape, p.dtype)
+        if device.shot_noise > 0.0:
+            noise += (device.shot_noise * jnp.sqrt(jnp.abs(p))
+                      * jax.random.normal(k_sh, p.shape, p.dtype))
+        p = p + noise
+    if device.adc_bits is not None:
+        p = photonics.fake_quant(p, device.adc_bits, amax=float(cfg.bank_cols))
+    out = jnp.sum(p, axis=-1)
+    return out.reshape(t, -1)[:, :m]
+
+
+def test_single_bus_bit_exact_with_legacy_emu_path():
+    """n_buses=1 reproduces the pre-bus emulation bit for bit, with every
+    nonideality on: read+shot noise, output ADC, drift residual."""
+    key = jax.random.PRNGKey(0)
+    device = mrr.MRRConfig(adc_bits=8, shot_noise=0.01)
+    cfg = photonics.PhotonicConfig(noise_std=0.098, mrr=device)
+    a = jax.random.uniform(key, (7, 33), minval=-1, maxval=1)
+    b = jax.random.uniform(jax.random.fold_in(key, 1), (61, 33),
+                           minval=-1, maxval=1)
+    res = 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (50, 20))
+    nk = jax.random.fold_in(key, 3)
+    legacy = _legacy_bank_product(a, b, cfg, key=nk, residual=res)
+    new = channel.bank_product(a, b, cfg, key=nk, residual=res[None])
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+
+
+@pytest.mark.parametrize("algo", algos.list_algos())
+def test_single_bus_algorithms_bit_exact_with_legacy(algo, monkeypatch):
+    """Satellite: every registered algorithm's noisy emu loss/grads at
+    n_buses=1 match the pre-bus signal chain bit for bit (the second run
+    swaps ``bank_product`` for the PR 3 re-implementation)."""
+    def cell():
+        hw = photonics.PhotonicConfig(
+            noise_std=0.098,
+            mrr=mrr.MRRConfig(adc_bits=10, drift_sigma=0.0, cal_noise=0.0))
+        session = api.build_session(arch="mnist_mlp", smoke=True, algo=algo,
+                                    hardware=hw, backend="emu",
+                                    log_every=10**9)
+        key = jax.random.PRNGKey(0)
+        state = session.init_state(key)
+        batch = {"x": jax.random.normal(key, (16, 64)),
+                 "y": jax.random.randint(key, (16,), 0, 10)}
+        return session.value_and_grad()(
+            state["params"], state["fb"], batch, jax.random.PRNGKey(1))
+
+    (l_new, _), g_new = cell()
+    monkeypatch.setattr(
+        channel, "bank_product",
+        lambda a_n, b_n, cfg, key=None, *, residual=None:
+        _legacy_bank_product(a_n, b_n, cfg, key=key, residual=residual))
+    (l_old, _), g_old = cell()
+    assert float(l_new) == float(l_old)
+    for x, y in zip(jax.tree_util.tree_leaves(g_new),
+                    jax.tree_util.tree_leaves(g_old)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# multi-bus equivalence with ref
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_buses,k_dim", [(2, 33), (3, 80), (5, 61)])
+def test_multibus_noiseless_matches_exact(n_buses, k_dim):
+    """Noiseless multi-bus scheduling (including idle-bus padding in the
+    last cycle) is exact to f32 tolerance."""
+    cfg = photonics.PhotonicConfig(noise_std=0.0, mrr=IDEAL, n_buses=n_buses)
+    key = jax.random.PRNGKey(n_buses)
+    a = jax.random.normal(key, (9, k_dim))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (73, k_dim))
+    out = channel.emulated_matmul(a, b, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("algo", algos.list_algos())
+def test_multibus_noiseless_matches_ref_for_every_algorithm(algo):
+    s_ref = api.build_session(arch="mnist_mlp", smoke=True, algo=algo,
+                              hardware="ideal", backend="ref", log_every=10**9)
+    s_bus = api.build_session(
+        arch="mnist_mlp", smoke=True, algo=algo,
+        hardware=photonics.PhotonicConfig(noise_std=0.0, mrr=IDEAL),
+        backend="emu", n_buses=3, log_every=10**9)
+    key = jax.random.PRNGKey(0)
+    state = s_ref.init_state(key)
+    batch = {"x": jax.random.normal(key, (16, 64)),
+             "y": jax.random.randint(key, (16,), 0, 10)}
+    (l_ref, _), g_ref = s_ref.value_and_grad()(
+        state["params"], state["fb"], batch, jax.random.PRNGKey(1))
+    (l_bus, _), g_bus = s_bus.value_and_grad()(
+        state["params"], state["fb"], batch, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(float(l_ref), float(l_bus), rtol=1e-6)
+    for x, y in zip(jax.tree_util.tree_leaves(g_ref),
+                    jax.tree_util.tree_leaves(g_bus)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_multibus_noise_statistics_match_ref():
+    """Idle buses in the last parallel cycle are noise-masked, so the
+    accumulated noise still counts panels — matching ref's single draw
+    (3 buses × 2 cycles schedule 6 slots, but K=80 is only 4 panels)."""
+    cfg = photonics.PhotonicConfig(noise_std=0.1, mrr=IDEAL, n_buses=3)
+    key = jax.random.PRNGKey(6)
+    a = jax.random.uniform(key, (512, 80), minval=-1, maxval=1)
+    b = jax.random.uniform(jax.random.fold_in(key, 1), (100, 80),
+                           minval=-1, maxval=1)
+    out = channel.emulated_matmul(a, b, cfg, key=jax.random.fold_in(key, 2))
+    err = np.asarray(out - a @ b.T)
+    s = float(jnp.max(jnp.abs(a)) * jnp.max(jnp.abs(b)))
+    expect = photonics.noise_sigma_total(80, 1.0, 1.0, cfg) * s
+    assert abs(err.std() / expect - 1.0) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# inter-bus crosstalk
+# ---------------------------------------------------------------------------
+
+def test_inter_bus_crosstalk_perturbs_and_compensation_recovers():
+    key = jax.random.PRNGKey(1)
+    w = jax.random.uniform(key, (1, 3, 10, 1, 8), minval=-0.9, maxval=0.9)
+    xt = dataclasses.replace(IDEAL, bus_crosstalk=0.02,
+                             compensate_crosstalk=False)
+    xt_comp = dataclasses.replace(xt, compensate_crosstalk=True, ct_iters=3)
+
+    def realized(cfg):
+        d = calibrate.command_deltas(w, cfg)
+        d = d + mrr.crosstalk_leak(d, cfg)
+        return mrr.ring_weight(d, cfg.gamma)
+
+    err_raw = float(jnp.abs(realized(xt) - w).max())
+    err_comp = float(jnp.abs(realized(xt_comp) - w).max())
+    assert err_raw > 1e-3  # adjacent buses really do couple
+    assert err_comp < err_raw / 5  # Jacobi pre-inversion recovers it
+
+
+def test_single_bus_layouts_see_no_inter_bus_term():
+    """bus_crosstalk is inert when the layout has no bus axis (bare grids,
+    4-D panel stacks) and when there is only one bus."""
+    cfg = dataclasses.replace(IDEAL, bus_crosstalk=0.05)
+    bare = jnp.ones((5, 4))
+    np.testing.assert_array_equal(
+        np.asarray(mrr.crosstalk_leak(bare, cfg)), np.zeros((5, 4)))
+    one_bus = jnp.ones((2, 1, 5, 3, 4))
+    np.testing.assert_array_equal(
+        np.asarray(mrr.crosstalk_leak(one_bus, cfg)),
+        np.zeros_like(np.asarray(one_bus)))
+
+
+# ---------------------------------------------------------------------------
+# bus-shaped hardware state through the Trainer
+# ---------------------------------------------------------------------------
+
+def _batch(model, key, n=16):
+    return {"x": jax.random.normal(key, (n, model.in_dim)),
+            "y": jax.random.randint(key, (n,), 0, model.n_classes)}
+
+
+def test_bus_state_threads_through_fit():
+    session = api.build_session(arch="mnist_mlp", smoke=True, algo="dfa",
+                                hardware="emu_onchip", backend="emu",
+                                n_buses=2, recalibrate_every=2,
+                                log_every=10**9)
+    init = session.init_state()
+    assert init["hw"]["drift"].shape == (2, 50, 20)
+    batch = _batch(session.model, jax.random.PRNGKey(0))
+    state, metrics = session.fit(lambda step: batch, total_steps=4,
+                                 verbose=False)
+    assert state["hw"]["drift"].shape == (2, 50, 20)
+    assert float(jnp.abs(state["hw"]["drift"]).max()) > 0.0
+    # buses drift independently: the two banks' paths differ
+    d = np.asarray(state["hw"]["drift"])
+    assert np.abs(d[0] - d[1]).max() > 0.0
+    assert np.isfinite(float(metrics["loss"]))
+    assert metrics["hw_residual_rms"] <= metrics["hw_drift_rms"] * 2.0
+
+
+def test_bus_state_checkpoints_and_replays(tmp_path):
+    """The (n_buses, rows, cols) hardware state saves/restores through the
+    Trainer's checkpoint path and replays bit-for-bit."""
+    def build(ckpt_dir):
+        return api.build_session(arch="mnist_mlp", smoke=True, algo="dfa",
+                                 hardware="emu_onchip", backend="emu",
+                                 n_buses=2, recalibrate_every=2,
+                                 ckpt_dir=ckpt_dir, ckpt_every=2,
+                                 log_every=10**9)
+
+    s_full = build(str(tmp_path / "a"))
+    batch = _batch(s_full.model, jax.random.PRNGKey(3))
+    state_full, _ = s_full.fit(lambda step: batch, total_steps=4,
+                               verbose=False)
+    # same run, interrupted at step 2 then resumed from the checkpoint
+    s_half = build(str(tmp_path / "b"))
+    s_half.fit(lambda step: batch, total_steps=2, verbose=False)
+    s_resume = build(str(tmp_path / "b"))
+    restored, start = s_resume.trainer.restore_or_init()
+    assert start == 2
+    assert restored["hw"]["drift"].shape == (2, 50, 20)
+    state_resumed, _ = s_resume.fit(lambda step: batch, total_steps=4,
+                                    verbose=False)
+    np.testing.assert_array_equal(np.asarray(state_full["hw"]["drift"]),
+                                  np.asarray(state_resumed["hw"]["drift"]))
+    for a, b in zip(jax.tree_util.tree_leaves(state_full["params"]),
+                    jax.tree_util.tree_leaves(state_resumed["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# api knob + BENCH_bus_scaling schema
+# ---------------------------------------------------------------------------
+
+def test_build_session_n_buses_override():
+    session = api.build_session(arch="mnist_mlp", smoke=True, n_buses=3,
+                                log_every=10**9)
+    assert session.config.dfa.photonics.n_buses == 3
+    assert photonics.preset("offchip_bpd").n_buses == 1  # presets untouched
+
+
+def test_bus_scaling_bench_schema(tmp_path):
+    from benchmarks import bus_scaling
+
+    rows = bus_scaling.run(bus_counts=(1, 2), steps=2, train_n=256,
+                           test_n=128, hidden=(16,))
+    assert [r["n_buses"] for r in rows] == [1, 2]
+    path = bus_scaling.write_report(rows, str(tmp_path))
+    assert path.endswith("BENCH_bus_scaling.json")
+    from repro.bench import load_bench
+
+    report = load_bench(path)  # raises on schema drift
+    for k in ("acc_b1", "acc_b2", "cycles_b1", "pj_per_mac_b2",
+              "cycle_speedup", "acc_spread_pts"):
+        assert k in report["metrics"]

@@ -246,7 +246,8 @@ def test_fit_threads_and_advances_hardware_state():
     batch = _batch(session.model, jax.random.PRNGKey(0))
     init = session.init_state()
     assert set(init["hw"]) == {"drift", "cal"}
-    assert init["hw"]["drift"].shape == (50, 20)  # the paper's physical bank
+    # the paper's physical bank, one bus: (n_buses, rows, cols)
+    assert init["hw"]["drift"].shape == (1, 50, 20)
     state, metrics = session.fit(lambda step: batch, total_steps=4,
                                  verbose=False)
     assert float(jnp.abs(state["hw"]["drift"]).max()) > 0.0
