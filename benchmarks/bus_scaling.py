@@ -46,15 +46,23 @@ LM_D_TAP = 896
 
 
 def schedule_row(n_buses: int, bank=(50, 20)) -> dict:
-    """Cycles/energy/TOPS of the LM feedback backward at one bus count."""
+    """Cycles/energy/TOPS of the LM feedback backward at one bus count —
+    per-bus laser stacks AND the shared-comb variant (one comb source
+    carries every bus's wavelengths, so the Eq. 3 floor is paid once)."""
     m, n = bank
     ecfg = energy.EnergyConfig(n_buses=n_buses)
     r = energy.dfa_backward_cost(LM_LAYERS, LM_D_TAP, ecfg, bank_m=m, bank_n=n)
+    shared = dataclasses.replace(ecfg, shared_comb=True)
+    r_sh = energy.dfa_backward_cost(LM_LAYERS, LM_D_TAP, shared,
+                                    bank_m=m, bank_n=n)
     pcfg = photonics.PhotonicConfig(bank_rows=m, bank_cols=n, n_buses=n_buses)
     assert r["cycles"] == sum(
         photonics.gemm_cycles(d, LM_D_TAP, pcfg) for d in LM_LAYERS)
     return {"cycles": r["cycles"], "seconds": r["seconds"],
-            "pj_per_mac": r["pj_per_mac"], "tops": r["tops"]}
+            "pj_per_mac": r["pj_per_mac"], "tops": r["tops"],
+            "pj_per_mac_shared_comb": r_sh["pj_per_mac"],
+            "power_w": energy.total_power(m, n, ecfg),
+            "power_w_shared_comb": energy.total_power(m, n, shared)}
 
 
 def run(bus_counts=(1, 2, 4), steps: int = 96, train_n: int = 2048,
@@ -89,6 +97,7 @@ def bench_metrics(rows) -> dict:
         metrics[f"acc_b{b}"] = r["test_accuracy"]
         metrics[f"cycles_b{b}"] = r["cycles"]
         metrics[f"pj_per_mac_b{b}"] = r["pj_per_mac"]
+        metrics[f"pj_per_mac_shared_comb_b{b}"] = r["pj_per_mac_shared_comb"]
         metrics[f"tops_b{b}"] = r["tops"]
     b_lo, b_hi = min(by_bus), max(by_bus)
     accs = [r["test_accuracy"] for r in rows]

@@ -1,29 +1,34 @@
-"""DFA's signature systems property, quantified at pod scale: the backward
-pass has NO inter-layer dependency (paper: "all the network layers can be
-updated in parallel during the backward pass"), so under stage (pipeline)
-parallelism the backward **bubble disappears**.
+"""DFA's signature systems property at pod scale: the backward pass has
+NO inter-layer dependency (paper: "all the network layers can be updated
+in parallel during the backward pass"), so under stage parallelism the
+backward bubble disappears — and the photonic coprocessor can run the
+whole feedback backward concurrently with the forward pipeline.
 
-Analytical critical-path model (GPipe-style schedule, S stages, M
-microbatches, per-stage fwd time f, per-stage bwd time b ≈ 2f):
+The original analytic two-number model here (per-stage fwd time f, bwd
+time b ≈ 2f, GPipe critical paths) is DEPRECATED: ``repro.sim`` now
+replays the actual panel schedule of the photonic backward as component-
+timed event timelines, so ``sim_rows`` prices the DFA backward with the
+simulator instead of the b ≈ 2f guess.  Per (arch × train_4k) dry-run
+cell it reports:
 
-    backprop  : T = (M + S - 1)·(f + b)          — bubble in fwd AND bwd
-    DFA       : T = (M + S - 1)·f + b + e        — fwd pipeline bubble only;
-                every stage runs its whole backward concurrently after ONE
-                broadcast of the error e (e ≈ one stage-boundary transfer)
+* ``t_fwd_s`` / ``t_bp_bwd_s`` — the TPU pipeline's forward and backprop
+  backward times from the dry-run's compute roofline term (unchanged:
+  these describe the digital substrate);
+* ``t_dfa_bwd_sim_s`` — the photonic feedback backward's simulated
+  wall-clock on a single 50×20 bus (repro.sim timeline, fills + heater
+  update included);
+* ``buses_for_parity`` — how many parallel WDM buses the photonic
+  coprocessor needs before its backward hides under the TPU backward it
+  replaces (wall-clock scales ~1/buses; the honest scale-out price).
 
-Bubble fraction saved = [(S-1)(f+b) - (S-1)f - b] / [(M+S-1)(f+b)].
-
-The per-stage times are derived from the dry-run's per-device compute
-roofline term (flops / peak), so the model is anchored to the compiled
-artifacts rather than invented constants.  This is a latency (critical-path)
-property: per-device collective BYTES are unchanged, which is why it is
-reported here and not as a roofline-term change (DESIGN.md §8.9).
+``benchmarks/run.py --bench`` folds these rows into BENCH_roofline.json.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import warnings
 
 
 def pipeline_times(f: float, b: float, stages: int, micro: int):
@@ -33,6 +38,13 @@ def pipeline_times(f: float, b: float, stages: int, micro: int):
 
 
 def run(dryrun_path="results/dryrun.json", stages=(2, 4, 8), micro=(1, 4, 16)):
+    """DEPRECATED analytic model (b ≈ 2f critical paths) — use
+    ``sim_rows``: repro.sim times the photonic backward from its real
+    panel schedule instead of a two-number guess."""
+    warnings.warn(
+        "dfa_pipeline_latency.run() is deprecated: use sim_rows() — "
+        "repro.sim replays the real panel schedule",
+        DeprecationWarning, stacklevel=2)
     rows = []
     if not os.path.exists(dryrun_path):
         return rows
@@ -58,11 +70,50 @@ def run(dryrun_path="results/dryrun.json", stages=(2, 4, 8), micro=(1, 4, 16)):
     return rows
 
 
+def sim_rows(dryrun_path="results/dryrun.json", mesh="single") -> list:
+    """Per train cell: TPU fwd/bwd roofline times vs the repro.sim
+    timeline of the photonic DFA backward (see module docstring)."""
+    import jax.numpy as jnp
+
+    from repro import configs, sim
+    from repro.core import photonics
+    from repro.launch import analysis
+
+    if not os.path.exists(dryrun_path):
+        return []
+    rows = []
+    with open(dryrun_path) as f:
+        recs = json.load(f)
+    for r in sorted(recs, key=lambda r: r["arch"]):
+        if (r.get("mesh") != mesh or r.get("status") != "ok"
+                or r.get("kind") != "train"):
+            continue
+        model = configs.get(r["arch"]).make_model(jnp.bfloat16)  # no alloc
+        work = sim.dfa_backward_workload(model, t=r["tokens"])
+        rep = sim.simulate(work, photonics.PhotonicConfig())
+        t_total = r["hlo_cost"]["flops"] / analysis.PEAK_FLOPS_BF16
+        t_fwd, t_bp_bwd = t_total / 3, 2 * t_total / 3
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_fwd_s": t_fwd, "t_bp_bwd_s": t_bp_bwd,
+            "t_dfa_bwd_sim_s": rep.wall_clock_s,
+            "photonic_macs_per_s": rep.macs_per_s,
+            "buses_for_parity": rep.wall_clock_s / t_bp_bwd
+            if t_bp_bwd > 0 else float("inf"),
+        })
+    return rows
+
+
 def main():
-    print("dfa_pipeline_latency: arch,stages,micro,t_bp_s,t_dfa_s,speedup")
-    for r in run():
-        print(f"{r['arch']},{r['stages']},{r['microbatches']},"
-              f"{r['t_bp_s']:.3f},{r['t_dfa_s']:.3f},{r['speedup']:.3f}")
+    rows = sim_rows()
+    if not rows:
+        print("no results/dryrun.json train cells — run repro.launch.dryrun")
+        return
+    print("dfa_pipeline_latency (repro.sim): "
+          "arch,t_fwd_s,t_bp_bwd_s,t_dfa_bwd_sim_s,buses_for_parity")
+    for r in rows:
+        print(f"{r['arch']},{r['t_fwd_s']:.4f},{r['t_bp_bwd_s']:.4f},"
+              f"{r['t_dfa_bwd_sim_s']:.4f},{r['buses_for_parity']:.1f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,139 @@
+"""Timing-accurate pipeline study (repro.sim): wall-clock latency,
+sustained MACs/s, stage occupancy, and pJ/MAC of the photonic DFA
+backward for the paper's own MLP and a qwen1.5-0.5b-shaped LM, swept
+over bus counts — plus the autotuner's pick under a power budget.
+
+This is the temporal counterpart of ``benchmarks/gemm_cycles.py`` (static
+cycle counts) and ``benchmarks/energy.py`` (static watts): the simulator
+replays the emulator's actual panel schedule as per-bus event timelines
+(paper Fig. 3 pipelining), so the latency numbers include pipeline fill,
+bus-quantization idle slots, and the per-step heater weight update that
+cycle counting cannot see.
+
+Emits ``BENCH_pipeline.json`` (schema repro.bench/v1);
+``benchmarks/run.py --bench`` runs it and CI requires the file.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro import api, sim
+from repro.core import energy, photonics
+
+# nominal per-step stream length (vectors through the banks); headline
+# ratios are batch-insensitive — fills and heater epilogues amortise
+T_STREAM = 64
+
+ARCHS = ("mnist_mlp", "qwen1.5-0.5b")
+
+
+def workload_for(arch: str, t: int = T_STREAM):
+    """DFA backward GEMMs of the full-size arch (shape-only, no params)."""
+    return sim.dfa_backward_workload(api.build_model(arch), t=t)
+
+
+def sweep_rows(arch: str, bus_counts=(1, 2, 4), t: int = T_STREAM,
+               shared_comb: bool = False) -> list:
+    """Simulate the arch's backward at each bus count (emulator tiling)."""
+    import dataclasses
+
+    work = workload_for(arch, t)
+    ecfg = energy.EnergyConfig(shared_comb=shared_comb)
+    rows = []
+    for n_buses in bus_counts:
+        pcfg = photonics.PhotonicConfig(n_buses=n_buses)
+        r = sim.simulate(work, pcfg, dataclasses.replace(ecfg, n_buses=n_buses))
+        rows.append({
+            "arch": arch, "n_buses": n_buses,
+            "wall_clock_us": r.wall_clock_s * 1e6,
+            "cycles": r.cycles,
+            "macs_per_s": r.macs_per_s,
+            "utilisation": r.utilisation,
+            "pj_per_mac": r.pj_per_mac,
+            "power_w": r.power_w,
+            "occupancy": dict(r.occupancy),
+        })
+    return rows
+
+
+def autotune_row(arch: str, t: int = T_STREAM,
+                 budget_buses: int = 4) -> dict:
+    """The tuner's pick with the budget set at a ``budget_buses``-bus chip
+    running full rate — room to trade buses against symbol rate."""
+    work = workload_for(arch, t)
+    pcfg = photonics.PhotonicConfig()
+    budget = sim.bank_power_w(pcfg, n_buses=budget_buses)
+    tuned = sim.autotune(work, pcfg, power_budget_w=budget)
+    base = sim.simulate(work, pcfg)  # the default single-bus schedule
+    return {
+        "arch": arch, "n_buses": tuned.n_buses, "tiling": tuned.tiling,
+        "f_s_ghz": tuned.f_s / 1e9, "power_budget_w": budget,
+        "power_w": tuned.power_w,
+        "wall_clock_us": tuned.wall_clock_s * 1e6,
+        "speedup_vs_b1": base.wall_clock_s / tuned.wall_clock_s,
+        "pj_per_mac": tuned.report.pj_per_mac,
+    }
+
+
+def run(bus_counts=(1, 2, 4), t: int = T_STREAM) -> dict:
+    return {
+        "sweep": [row for arch in ARCHS
+                  for row in sweep_rows(arch, bus_counts, t)],
+        "autotune": [autotune_row(arch, t) for arch in ARCHS],
+    }
+
+
+def bench_metrics(results: dict) -> dict:
+    metrics = {}
+    for r in results["sweep"]:
+        p = f"{r['arch'].replace('.', '_').replace('-', '_')}_b{r['n_buses']}_"
+        metrics[p + "wall_us"] = r["wall_clock_us"]
+        metrics[p + "macs_per_s"] = r["macs_per_s"]
+        metrics[p + "pj_per_mac"] = r["pj_per_mac"]
+        metrics[p + "utilisation"] = r["utilisation"]
+        metrics[p + "occ_adc"] = r["occupancy"]["adc"]
+    for r in results["autotune"]:
+        p = f"{r['arch'].replace('.', '_').replace('-', '_')}_auto_"
+        metrics[p + "n_buses"] = float(r["n_buses"])
+        metrics[p + "f_s_ghz"] = r["f_s_ghz"]
+        metrics[p + "wall_us"] = r["wall_clock_us"]
+        metrics[p + "speedup_vs_b1"] = r["speedup_vs_b1"]
+        metrics[p + "power_w"] = r["power_w"]
+    return metrics
+
+
+def write_report(results: dict, out_dir: str = ".") -> str:
+    from repro.bench import write_bench
+
+    return write_bench("pipeline", bench_metrics(results),
+                       meta={"t_stream": T_STREAM, **results},
+                       out_dir=out_dir)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--buses", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--t", type=int, default=T_STREAM,
+                    help="streamed vectors per step")
+    ap.add_argument("--bench-dir", default=None, metavar="DIR",
+                    help="also write BENCH_pipeline.json into DIR")
+    args = ap.parse_args()
+    results = run(bus_counts=tuple(args.buses), t=args.t)
+    print("pipeline_sim: arch,n_buses,wall_us,TMAC/s,util,pJ/MAC")
+    for r in results["sweep"]:
+        print(f"{r['arch']},{r['n_buses']},{r['wall_clock_us']:.2f},"
+              f"{r['macs_per_s'] / 1e12:.3f},{r['utilisation']:.3f},"
+              f"{r['pj_per_mac']:.3f}")
+    for r in results["autotune"]:
+        print(f"[autotune] {r['arch']}: n_buses={r['n_buses']} "
+              f"tiling={r['tiling']} f_s={r['f_s_ghz']:.2f}GHz "
+              f"-> {r['wall_clock_us']:.2f}us "
+              f"({r['speedup_vs_b1']:.2f}x vs 1 bus, "
+              f"{r['power_w']:.1f}W <= {r['power_budget_w']:.1f}W)")
+    if args.bench_dir is not None:
+        print(f"[bench] wrote {write_report(results, args.bench_dir)}")
+
+
+if __name__ == "__main__":
+    main()

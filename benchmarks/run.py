@@ -10,7 +10,9 @@ its paper anchor).  Individual modules offer richer CLIs:
   python -m benchmarks.energy             (Fig. 6 / Eq. 2)
   python -m benchmarks.gemm_cycles        (§3 GeMM compiler)
   python -m benchmarks.dfa_vs_bp          (§1 claim)
-  python -m benchmarks.roofline           (deliverable g; needs results/dryrun.json)
+  python -m benchmarks.roofline           (deliverable g; --bench auto-
+                                           generates results/dryrun.json)
+  python -m benchmarks.pipeline_sim       (repro.sim timing study)
 
 ``--smoke`` instead runs one ``repro.api.build_session(...).fit`` step for
 EVERY algorithm registered in ``repro.algos`` (mnist_mlp smoke arch) — the
@@ -24,8 +26,11 @@ nonzero when any of them fails.
 ``--bench`` measures training throughput (repro.bench.StepTimer over a
 data-parallel ``Session.fit``) and writes ``BENCH_train_throughput.json``
 plus the drift/recalibration study (``benchmarks.drift_recovery``) as
-``BENCH_hardware.json`` and the multi-wavelength scale-out sweep
-(``benchmarks.bus_scaling``) as ``BENCH_bus_scaling.json``; combined with
+``BENCH_hardware.json``, the multi-wavelength scale-out sweep
+(``benchmarks.bus_scaling``) as ``BENCH_bus_scaling.json``, the repro.sim
+timing study (``benchmarks.pipeline_sim``) as ``BENCH_pipeline.json``,
+and the roofline + photonic-backward parity numbers (auto-generating the
+dry-run record when missing) as ``BENCH_roofline.json``; combined with
 ``--smoke`` it also writes ``BENCH_smoke.json``.  CI archives the
 ``BENCH_*.json`` files — they are the repo's perf trajectory.
 """
@@ -125,17 +130,16 @@ def tab_ternary_error():
 
 
 def tab_dfa_pipeline_latency():
-    from benchmarks.dfa_pipeline_latency import run
+    sim_rows = _sibling("dfa_pipeline_latency").sim_rows
 
-    us, rows = _timed(run)
+    us, rows = _timed(sim_rows)
     if not rows:
         return us, "SKIP (no results/dryrun.json)"
-    big = [r for r in rows if r["arch"] == "kimi-k2-1t-a32b"
-           and r["stages"] == 2 and r["microbatches"] == 4]
-    r = big[0] if big else rows[0]
-    return us, ("backward-bubble elimination: %s S=%d M=%d -> %.2fx step "
-                "latency vs pipelined BP (paper's parallel-update claim)"
-                % (r["arch"], r["stages"], r["microbatches"], r["speedup"]))
+    r = rows[0]
+    return us, ("photonic DFA backward (repro.sim): %s %.3fs vs BP bwd "
+                "%.3fs -> %.0f buses for parity"
+                % (r["arch"], r["t_dfa_bwd_sim_s"], r["t_bp_bwd_s"],
+                   r["buses_for_parity"]))
 
 
 def tab_roofline():
@@ -311,6 +315,71 @@ def bench_bus_scaling(out_dir: str = ".", steps: int = 96) -> str:
     return path
 
 
+def bench_pipeline(out_dir: str = ".") -> str:
+    """Run the repro.sim pipeline study (latency / MACs-per-s / occupancy /
+    pJ-per-MAC vs bus count + the autotuner's pick) and write
+    BENCH_pipeline.json."""
+    ps = _sibling("pipeline_sim")
+
+    path = ps.write_report(ps.run(), out_dir)
+    print(f"[bench] wrote {path}", flush=True)
+    return path
+
+
+def _ensure_dryrun(path: str, arch: str = "qwen1.5-0.5b") -> str:
+    """Auto-generate the dry-run record the roofline needs (one train cell
+    on the single-pod mesh, ~10 s) when none exists yet.  Runs in a
+    subprocess: repro.launch.dryrun forces 512 placeholder devices at
+    import, which must not leak into this process's jax."""
+    import subprocess
+    import sys
+
+    if os.path.exists(path):
+        return path
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", "train_4k", "--mesh", "single", "--out", path],
+        check=True, env=env)
+    return path
+
+
+def bench_roofline(out_dir: str = ".") -> str:
+    """Wire the (previously orphaned) roofline + DFA-pipeline-latency
+    studies into the bench trajectory: auto-generate the dry-run record if
+    missing, then write BENCH_roofline.json (per-cell roofline terms plus
+    the repro.sim photonic-backward parity numbers)."""
+    rl = _sibling("roofline")
+    dpl = _sibling("dfa_pipeline_latency")
+    from repro.bench import write_bench
+
+    path = _ensure_dryrun(
+        os.environ.get("REPRO_DRYRUN_JSON", "results/dryrun.json"))
+    rows = rl.roofline_rows(path, "single")
+    sim_rows = dpl.sim_rows(path, "single")
+    metrics = {}
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        p = r["arch"].replace(".", "_").replace("-", "_")
+        metrics[f"{p}_{r['shape']}_compute_fraction"] = r["compute_fraction"]
+        metrics[f"{p}_{r['shape']}_t_compute_s"] = r["t_compute_s"]
+        metrics[f"{p}_{r['shape']}_t_memory_s"] = r["t_memory_s"]
+    for r in sim_rows:
+        p = r["arch"].replace(".", "_").replace("-", "_")
+        metrics[f"{p}_{r['shape']}_dfa_bwd_sim_s"] = r["t_dfa_bwd_sim_s"]
+        metrics[f"{p}_{r['shape']}_buses_for_parity"] = r["buses_for_parity"]
+    if not metrics:
+        raise RuntimeError(f"no ok roofline cells in {path}")
+    out = write_bench("roofline", metrics,
+                      meta={"dryrun": path, "rows": rows,
+                            "sim_rows": sim_rows}, out_dir=out_dir)
+    print(f"[bench] wrote {out}", flush=True)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -337,6 +406,8 @@ def main() -> None:
                          batch=args.bench_batch, algo=args.bench_algo)
         bench_hardware(out_dir=args.bench_dir, steps=args.hardware_steps)
         bench_bus_scaling(out_dir=args.bench_dir, steps=args.bus_steps)
+        bench_pipeline(out_dir=args.bench_dir)
+        bench_roofline(out_dir=args.bench_dir)
         return
     print("name,us_per_call,derived")
     for name, fn in TABLES:

@@ -30,6 +30,12 @@ Typical use::
 ``arch`` is a name from ``repro.configs`` (or an already-built DFAModel
 instance).  Everything else is optional with paper-faithful defaults
 (SGD momentum 0.9, lr 0.01 — the paper's §4 optimizer).
+
+``schedule="auto"`` invokes the ``repro.sim`` autotuner: the fastest
+(n_buses, tiling, f_s) for THIS model's DFA backward under
+``power_budget_w`` is simulated from the emulator's real panel schedule
+and applied to the session's photonics; the winning ``TunedSchedule``
+(timeline report included) is kept on ``Session.schedule``.
 """
 
 from __future__ import annotations
@@ -70,6 +76,9 @@ class Session:
     model: typing.Any
     algorithm: algos.Algorithm
     trainer: Trainer
+    # the autotuned photonic schedule (repro.sim), when built with
+    # schedule="auto"; None means the hardware config was taken as given
+    schedule: typing.Any = None
 
     @property
     def config(self) -> TrainerConfig:
@@ -119,6 +128,9 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
                   error_compress: str = "none", freeze_norms: bool = False,
                   feedback: fb_lib.FeedbackConfig | None = None,
                   n_buses: int | None = None,
+                  schedule: str | None = None,
+                  power_budget_w: float | None = None,
+                  schedule_batch: int | None = None,
                   microbatches: int = 1,
                   data_parallel: bool | str = "auto", prefetch: int = 2,
                   recalibrate_every: int | None = None,
@@ -134,6 +146,34 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
     if n_buses is not None:
         # multi-wavelength scale-out: override the preset's bus count
         hw_cfg = dataclasses.replace(hw_cfg, n_buses=n_buses)
+    tuned = None
+    if schedule == "auto":
+        # repro.sim schedule autotuning: search (n_buses, tiling, f_s) on
+        # THIS model's DFA backward under the power budget and run the
+        # session on the winner.  A caller-pinned n_buses narrows the
+        # search to that bus count; schedule_batch is the nominal per-step
+        # vector count the timelines stream (relative ranking is
+        # batch-insensitive — fills and heater epilogues amortise).
+        from repro import sim
+
+        workload = sim.dfa_backward_workload(model, t=schedule_batch or 64)
+        bus_counts = ((n_buses,) if n_buses is not None
+                      else sim.DEFAULT_BUS_COUNTS)
+        # search only "panel" tilings: that is the layout the emulator
+        # actually executes, so the applied (n_buses, f_s) is optimal for
+        # the schedule the session will really run ("layer" projections
+        # stay available through sim.autotune directly)
+        tuned = sim.autotune(workload, hw_cfg,
+                             power_budget_w=power_budget_w,
+                             bus_counts=bus_counts, tilings=("panel",))
+        hw_cfg = tuned.apply(hw_cfg)
+    elif schedule is not None:
+        raise ValueError(f"unknown schedule {schedule!r} (None | 'auto')")
+    elif power_budget_w is not None or schedule_batch is not None:
+        # these only steer the autotuner — accepting them without
+        # schedule="auto" would silently enforce nothing
+        raise ValueError(
+            "power_budget_w/schedule_batch require schedule='auto'")
     if backend_obj.stateful_hardware and hw_cfg.mrr is None:
         # device-level backend with an abstract hardware preset: attach the
         # default device description (drift ON) so the emulation has a bank
@@ -163,4 +203,4 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
         step_deadline_s=step_deadline_s,
     )
     return Session(model=model, algorithm=algorithm,
-                   trainer=Trainer(model, cfg))
+                   trainer=Trainer(model, cfg), schedule=tuned)

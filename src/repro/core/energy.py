@@ -26,6 +26,11 @@ class EnergyConfig:
     # TIAs and ADCs (Eq. 4 per-bus terms); throughput (Eq. 2) scales with
     # the bus count while E_op stays flat up to schedule-quantization loss
     n_buses: int = 1
+    # one frequency-comb source feeds every bus (paper §5 cites Kerr combs
+    # powering hundreds of channels): the Eq. 3 laser floor is then paid
+    # once and split across the banks instead of once per bus — the
+    # remaining Eq. 4 terms (rings, DACs, TIA/ADC chains) stay per-bus
+    shared_comb: bool = False
     n_bits: int = 6  # fixed-point precision N_b
     eta: float = 0.2  # laser+detector+waveguide efficiency
     c_pd: float = 2.4e-15  # photodetector capacitance [F]
@@ -55,24 +60,33 @@ def ops_per_second(m: int, n: int, cfg: EnergyConfig) -> float:
 
 
 def laser_power(m: int, cfg: EnergyConfig) -> float:
-    """Eq. (3): optical power floor per laser for M-row fan-out."""
+    """Eq. (3): optical power floor per laser for M-row fan-out — the
+    required photons per symbol (shot-noise or PD-capacitance limited,
+    whichever is worse) delivered at the operational rate.  The ×f_s
+    converts the per-symbol energy floor to watts; without it the
+    "power" was dimensionally J/symbol (sub-pW — a bug that made the
+    laser share of Eq. 4 vanish and the shared-comb variant a no-op)."""
     shot_limit = 2.0 ** (2 * cfg.n_bits + 1)
     cap_limit = cfg.c_pd * cfg.v_d / ELEMENTARY_CHARGE
-    return m * (H_BAR_OMEGA_1550NM / cfg.eta) * max(shot_limit, cap_limit)
+    per_symbol = m * (H_BAR_OMEGA_1550NM / cfg.eta) * max(shot_limit, cap_limit)
+    return per_symbol * cfg.f_s
 
 
 def total_power(m: int, n: int, cfg: EnergyConfig) -> float:
     """Eq. (4): wall-plug power of an M×N weight bank circuit, times the
     ``n_buses`` parallel copies — every term is per-bus (each bus carries
     its own N lasers and input DACs, N·(M+1) tuned rings, and M TIA/ADC
-    readout chains)."""
+    readout chains).  With ``shared_comb`` one comb source carries the N
+    laser lines for ALL buses, so the Eq. 3 floor is paid once."""
+    lasers = n * laser_power(m, cfg)
+    if not cfg.shared_comb:
+        lasers *= cfg.n_buses
     per_bus = (
-        n * laser_power(m, cfg)
-        + n * (m + 1) * cfg.p_mrr
+        n * (m + 1) * cfg.p_mrr
         + n * cfg.p_dac
         + m * (cfg.p_tia + cfg.p_adc)
     )
-    return cfg.n_buses * per_bus
+    return lasers + cfg.n_buses * per_bus
 
 
 def energy_per_op(m: int, n: int, cfg: EnergyConfig) -> float:

@@ -53,6 +53,12 @@ class PhotonicConfig:
     # same operational cycle, so throughput scales ~linearly while the
     # accumulated noise per output (one draw per *panel*) is unchanged.
     n_buses: int = 1
+    # yield/failure model: buses (by physical index < n_buses) whose whole
+    # modulator→bank→BPD chain is dead.  The GeMM compiler reroutes panels
+    # onto the surviving buses — schedules lengthen (``n_bank_passes``
+    # counts alive buses) but training keeps running; per-ring drift/cal
+    # state keeps the full physical (n_buses, rows, cols) shape.
+    failed_buses: tuple = ()
     noise_std: float = 0.0  # per-bank-pass Gaussian σ (0 = ideal hardware)
     noise_convention: str = "absolute"  # absolute | fullscale
     weight_bits: int | None = None  # fake-quant of inscribed MRR weights
@@ -138,11 +144,31 @@ def n_contraction_panels(k_dim: int, cfg: PhotonicConfig) -> int:
     return max(1, math.ceil(k_dim / cfg.bank_cols))
 
 
+def active_buses(cfg: PhotonicConfig) -> int:
+    """Buses actually carrying panels: the physical count minus the failed
+    ones (``cfg.failed_buses``).  A chip with every bus dead cannot run."""
+    n = max(cfg.n_buses, 1)
+    failed = {b for b in cfg.failed_buses if 0 <= b < n}
+    alive = n - len(failed)
+    if alive < 1:
+        raise ValueError(
+            f"all {n} buses failed ({sorted(failed)}): no path through the chip")
+    return alive
+
+
+def alive_bus_indices(cfg: PhotonicConfig) -> tuple:
+    """Physical indices of the surviving buses, in order — the panel
+    scheduler's logical-bus → physical-bank map."""
+    n = max(cfg.n_buses, 1)
+    failed = {b for b in cfg.failed_buses if 0 <= b < n}
+    return tuple(b for b in range(n) if b not in failed)
+
+
 def n_bank_passes(k_dim: int, cfg: PhotonicConfig) -> int:
-    """Operational cycles along the contraction dim: the ``n_buses``
+    """Operational cycles along the contraction dim: the surviving
     parallel banks each take one panel per cycle, so the schedule length
-    is ⌈panels / n_buses⌉ (== panels on a single bus)."""
-    return math.ceil(n_contraction_panels(k_dim, cfg) / max(cfg.n_buses, 1))
+    is ⌈panels / active_buses⌉ (== panels on a single bus)."""
+    return math.ceil(n_contraction_panels(k_dim, cfg) / active_buses(cfg))
 
 
 def gemm_cycles(m: int, k: int, cfg: PhotonicConfig) -> int:

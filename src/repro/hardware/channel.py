@@ -57,19 +57,20 @@ def _pad_axis(x, mult: int, axis: int):
 
 def tile_operands(a_n, b_n, cfg):
     """Split normalised operands into bank-sized panels scheduled across
-    the ``cfg.n_buses`` parallel buses.
+    the surviving parallel buses (``photonics.active_buses`` — failed
+    buses carry no panels; the scheduler reroutes onto the alive ones).
 
-    a_n: (T, K) -> (T, n_buses, nj, cols);
-    b_n: (M, K) -> (nm, n_buses, rows, nj, cols);
+    a_n: (T, K) -> (T, n_alive, nj, cols);
+    b_n: (M, K) -> (nm, n_alive, rows, nj, cols);
     returns (a_t, b_t, n_panels) where n_panels = ⌈K/cols⌉ is the number
-    of REAL contraction panels and nj = ⌈n_panels/n_buses⌉ the bus-cycle
-    count — panel p runs as cycle p // n_buses on bus p % n_buses.
+    of REAL contraction panels and nj = ⌈n_panels/n_alive⌉ the bus-cycle
+    count — panel p runs as cycle p // n_alive on alive bus p % n_alive.
     Zero padding is harmless: padded K columns multiply zero inputs,
     padded M rows are sliced off the output, and bus-padded panels (idle
     buses in the last cycle) are noise-masked in ``bank_product``.
     """
     rows, cols = cfg.bank_rows, cfg.bank_cols
-    n_buses = max(cfg.n_buses, 1)
+    n_buses = photonics.active_buses(cfg)
     t = a_n.shape[0]
     a_p = _pad_axis(a_n, cols, 1)
     nk = a_p.shape[1] // cols
@@ -87,21 +88,60 @@ def realized_weights(w_target, cfg, residual=None):
     """The full inscription path: targets -> commanded heaters -> physical
     detunings (leak + drift residual) -> realized Lorentzian weights.
 
-    ``w_target``: the bus-tiled (nm, n_buses, rows, nj, cols) layout, a
+    ``w_target``: the bus-tiled (nm, n_alive, rows, nj, cols) layout, a
     bus-free (..., rows, nk, cols) panel stack, or a bare (rows, cols)
-    grid; ``residual``: per-ring detuning error — (n_buses, rows, cols)
+    grid; ``residual``: per-ring detuning error — (n_alive, rows, cols)
     for the bus-tiled layout, (rows, cols) for bare grids — broadcast
     over the (nm, nj) panel axes.
     """
     device = cfg.mrr or mrr.MRRConfig()
-    delta_cmd = calibrate.command_deltas(w_target, device)
-    delta_eff = delta_cmd + mrr.crosstalk_leak(delta_cmd, device)
+    if (cfg.failed_buses and device.bus_crosstalk != 0.0
+            and w_target.ndim >= 5):
+        # inter-bus thermal coupling follows the PHYSICAL bank stack, not
+        # the compacted alive-bus schedule: a dead (undriven, δ=0) bank
+        # between two survivors contributes no aggressor field but still
+        # separates them, so both the Jacobi pre-compensation and the
+        # leak must run on the physical bus axis
+        delta_eff = _physical_bus_effective_deltas(w_target, cfg, device)
+    else:
+        delta_cmd = calibrate.command_deltas(w_target, device)
+        delta_eff = delta_cmd + mrr.crosstalk_leak(delta_cmd, device)
     if residual is not None:
         if w_target.ndim >= 3:  # panel layout: broadcast over (nm, nj)
             delta_eff = delta_eff + residual[..., :, None, :]
         else:
             delta_eff = delta_eff + residual
     return mrr.ring_weight(delta_eff, device.gamma)
+
+
+def _physical_bus_effective_deltas(w_target, cfg, device):
+    """Effective (post-leak) detunings for a chip with failed buses and
+    inter-bus crosstalk: the alive-layout targets are embedded into the
+    physical (nm, n_buses, rows, nj, cols) stack with dead banks pinned
+    undriven at δ=0, the controller's pre-compensation and the physical
+    leak both act on that stack, and the alive slice is read back."""
+    alive = jnp.asarray(photonics.alive_bus_indices(cfg))
+    n_buses = max(cfg.n_buses, 1)
+
+    def embed(x):
+        shape = x.shape[:-4] + (n_buses,) + x.shape[-3:]
+        return jnp.zeros(shape, x.dtype).at[..., alive, :, :, :].set(x)
+
+    delta_target = embed(mrr.inscribe(w_target, device))
+    delta_phys = delta_target
+    if device.compensate_crosstalk and (
+            device.crosstalk != 0.0 or device.bus_crosstalk != 0.0):
+        # calibrate.compensate_crosstalk's Jacobi loop, with the dead
+        # banks projected back to δ=0 each sweep — the controller never
+        # drives them, so they must not accumulate phantom commands that
+        # their alive neighbours would then pre-compensate against
+        for _ in range(device.ct_iters):
+            delta_phys = delta_target - mrr.crosstalk_leak(delta_phys, device)
+            delta_phys = embed(jnp.take(delta_phys, alive, axis=-4))
+    delta_phys = calibrate.quantize_command(
+        jnp.clip(delta_phys, 0.0, device.delta_max), device)
+    delta_eff = delta_phys + mrr.crosstalk_leak(delta_phys, device)
+    return jnp.take(delta_eff, alive, axis=-4)
 
 
 def _per_pass_sigma(cfg) -> float:
@@ -123,7 +163,19 @@ def bank_product(a_n, b_n, cfg, key=None, *, residual=None):
     t, _k = a_n.shape
     m = b_n.shape[0]
     a_t, b_t, n_panels = tile_operands(a_n, b_n, cfg)
+    alive_idx = jnp.asarray(photonics.alive_bus_indices(cfg))
+    if residual is not None and cfg.failed_buses and residual.ndim == 3:
+        # carried state spans the physical (n_buses, rows, cols) grid; the
+        # schedule only touches the alive banks
+        residual = jnp.take(residual, alive_idx, axis=0)
     w_eff = realized_weights(b_t, cfg, residual)
+    if device.dead_ring_rate > 0.0:
+        # fabrication yield: dead rings read 0 at the BPD whatever was
+        # commanded — a chip-fixed mask over the physical ring grid
+        phys = mrr.dead_ring_mask(
+            device, (max(cfg.n_buses, 1), cfg.bank_rows, cfg.bank_cols))
+        alive = jnp.take(phys, alive_idx, axis=0)
+        w_eff = w_eff * alive[..., :, None, :]
     # one einsum over all (nm, bus, cycle) panels: p[t, i, r, q, j] is the
     # partial sum of output row block i, ring row r, bus q, bus-cycle j
     p = jnp.einsum("tqjc,iqrjc->tirqj", a_t, w_eff)

@@ -62,6 +62,15 @@ class MRRConfig:
     drift_sigma: float = 0.05  # OU stationary detuning-drift std (gamma units)
     drift_tau: float = 1000.0  # OU relaxation time (training steps)
     cal_noise: float = 0.005  # detuning measurement noise of a calibration sweep
+    # fabrication yield: fraction of rings dead on arrival (stuck dark —
+    # their BPD contribution reads 0).  The dead set is a fixed property of
+    # the chip, drawn deterministically from ``yield_seed``.
+    dead_ring_rate: float = 0.0
+    yield_seed: int = 0
+    # heater thermal settling time [s] — the latency of re-inscribing a
+    # ring's weight (repro.sim prices weight updates/recalibration with it;
+    # the per-sample streaming path never waits on it)
+    thermal_settle_s: float = 2e-6
 
     @classmethod
     def ideal(cls) -> "MRRConfig":
@@ -75,6 +84,19 @@ class MRRConfig:
     def stateful(self) -> bool:
         """True when the device drifts — training must carry hardware state."""
         return self.drift_sigma > 0.0
+
+
+def dead_ring_mask(cfg: MRRConfig, shape: tuple):
+    """1/0 survival mask over the physical ring grid (``shape`` is usually
+    (n_buses, rows, cols)).  The dead set is chip-fixed: deterministic in
+    ``yield_seed`` and independent of the training step or PRNG stream."""
+    if cfg.dead_ring_rate <= 0.0:
+        return jnp.ones(shape, jnp.float32)
+    import jax
+
+    key = jax.random.PRNGKey(cfg.yield_seed ^ 0xDEAD)
+    alive = jax.random.bernoulli(key, 1.0 - cfg.dead_ring_rate, shape)
+    return alive.astype(jnp.float32)
 
 
 def ring_weight(delta, gamma: float = 1.0):

@@ -13,8 +13,11 @@ dfa-fused, dfa-layerwise, plus anything a plugin registers); ``--preset``
 is the photonic hardware model (including the device-level ``emu_*``
 presets) and ``--backend`` the execution path (ref | pallas | emu | auto).
 ``--recal-every`` sets the in-situ recalibration cadence for drifting
-hardware under the emu backend.  Adding an algorithm or backend is a
-registration — this launcher picks it up without edits.
+hardware under the emu backend; ``--autotune`` (optionally with
+``--power-budget-w``) lets the ``repro.sim`` schedule autotuner pick the
+fastest (n_buses, tiling, f_s) for the model's DFA backward before
+training starts.  Adding an algorithm or backend is a registration —
+this launcher picks it up without edits.
 
 Production-scale posture: the same step function is what launch/dryrun.py
 lowers against the (pod, data, model) mesh; on a real multi-host cluster
@@ -61,10 +64,19 @@ def main():
     ap.add_argument("--n-buses", type=int, default=None,
                     help="parallel WDM buses (multi-wavelength scale-out); "
                          "default: the preset's bus count (1)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="repro.sim schedule autotuning: pick the fastest "
+                         "(n_buses, tiling, f_s) for this model's DFA "
+                         "backward under --power-budget-w")
+    ap.add_argument("--power-budget-w", type=float, default=None,
+                    help="wall-plug power budget [W] for --autotune "
+                         "(default: unconstrained)")
     ap.add_argument("--bench-json", default=None, metavar="DIR",
                     help="measure throughput and write "
                          "BENCH_train_throughput.json into DIR")
     args = ap.parse_args()
+    if args.power_budget_w is not None and not args.autotune:
+        ap.error("--power-budget-w only steers --autotune")
 
     session = api.build_session(
         arch=args.arch,
@@ -80,10 +92,15 @@ def main():
         prefetch=args.prefetch,
         recalibrate_every=args.recal_every,
         n_buses=args.n_buses,
+        schedule="auto" if args.autotune else None,
+        power_budget_w=args.power_budget_w,
+        schedule_batch=args.batch if args.autotune else None,
     )
     model = session.model
     if session.mesh is not None:
         print(f"[dist] data-parallel over {session.mesh.devices.size} devices")
+    if session.schedule is not None:
+        print(f"[sim] autotuned schedule: {session.schedule.describe()}")
 
     timer = None
     if args.bench_json is not None:

@@ -1,0 +1,32 @@
+"""``repro.sim`` — discrete-event, component-timed simulation of the
+photonic training pipeline (paper Fig. 3, Eqs. 2–4).
+
+The static layer (``photonics.gemm_cycles``, ``core.energy``) counts
+cycles and prices watts; this package answers the *temporal* questions:
+what wall-clock speed does a schedule actually reach once DAC settling,
+modulation, ring response, BPD/TIA rise, ADC conversion, and heater
+updates overlap — and which (n_buses, bank tiling, f_s) schedule is the
+fastest one that fits a power budget.
+
+* ``components`` — per-stage timing/power models from
+  ``PhotonicConfig``/``MRRConfig``/``EnergyConfig``
+* ``pipeline``   — replays the emulator's own panel schedule
+  (``hardware.channel.tile_operands``) as per-bus event timelines
+* ``autotune``   — searches the schedule space under a power budget
+
+Entry points: ``api.build_session(schedule="auto")``,
+``launch/train.py --autotune``, ``benchmarks/pipeline_sim.py``.
+"""
+
+from repro.sim.autotune import (DEFAULT_BUS_COUNTS, Candidate, TunedSchedule,
+                                autotune)
+from repro.sim.components import STAGES, StageTimes, bank_power_w, stage_times
+from repro.sim.pipeline import (Gemm, PipelineReport, dfa_backward_workload,
+                                panel_schedule, simulate)
+
+__all__ = [
+    "DEFAULT_BUS_COUNTS", "Candidate", "TunedSchedule", "autotune",
+    "STAGES", "StageTimes", "bank_power_w", "stage_times",
+    "Gemm", "PipelineReport", "dfa_backward_workload", "panel_schedule",
+    "simulate",
+]

@@ -1,0 +1,127 @@
+"""Schedule autotuner: the fastest feasible (n_buses, tiling, f_s).
+
+The knobs trade against each other under a wall-plug power budget:
+
+* more buses — near-linear speedup on deep contractions (Eq. 2), but
+  every bus adds its Eq. 4 ring/DAC/TIA/ADC stack (and, without a shared
+  comb, its own laser stack);
+* bank tiling — "panel" (the emulator's round-robin layout, per-GEMM bus
+  quantization) vs "layer" (whole DFA layers per bus — coarser, but no
+  idle-bus padding inside a GEMM);
+* f_s — throughput is linear in the symbol rate, and so is the TIA term;
+  under a tight budget, slower symbols can buy a bus that more than pays
+  the rate back.
+
+``autotune`` simulates every candidate with ``sim.pipeline.simulate`` on
+the caller's actual workload and returns the fastest schedule whose
+power fits the budget, with every evaluated candidate attached for
+inspection (``TunedSchedule.candidates``).  ``repro.api.build_session``
+exposes it as ``schedule="auto"``; ``launch/train.py`` as ``--autotune``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import photonics
+from repro.sim import components, pipeline
+
+DEFAULT_BUS_COUNTS = (1, 2, 4, 8)
+DEFAULT_TILINGS = ("panel", "layer")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    n_buses: int
+    tiling: str
+    f_s: float
+    power_w: float
+    feasible: bool
+    wall_clock_s: float | None  # None when skipped on power
+    report: pipeline.PipelineReport | None
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedSchedule:
+    """The winning schedule plus the full search record."""
+
+    n_buses: int
+    tiling: str
+    f_s: float
+    power_w: float
+    report: pipeline.PipelineReport
+    power_budget_w: float | None
+    candidates: tuple
+
+    @property
+    def wall_clock_s(self) -> float:
+        return self.report.wall_clock_s
+
+    def apply(self, pcfg: photonics.PhotonicConfig) -> photonics.PhotonicConfig:
+        """The tuned hardware description: bus count and symbol rate set.
+        (Tiling is a scheduling policy, not a device property — the
+        emulator always runs the "panel" layout; the math is identical.)
+        """
+        return dataclasses.replace(pcfg, n_buses=self.n_buses, f_s=self.f_s)
+
+    def describe(self) -> str:
+        r = self.report
+        return (f"n_buses={self.n_buses} tiling={self.tiling} "
+                f"f_s={self.f_s / 1e9:.2f}GHz -> "
+                f"{r.wall_clock_s * 1e6:.2f}us/step "
+                f"{r.macs_per_s / 1e12:.3f}TMAC/s {r.power_w:.1f}W "
+                f"{r.pj_per_mac:.2f}pJ/MAC")
+
+
+def default_f_s_grid(f_max: float) -> tuple:
+    """Symbol-rate candidates: the DAC limit and two halvings of it."""
+    return (f_max, f_max / 2.0, f_max / 4.0)
+
+
+def autotune(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
+             power_budget_w: float | None = None,
+             bus_counts: tuple = DEFAULT_BUS_COUNTS,
+             f_s_grid: tuple | None = None,
+             tilings: tuple = DEFAULT_TILINGS,
+             include_weight_update: bool = True) -> TunedSchedule:
+    """Exhaustive search of the (small) schedule space on the real
+    workload.  Raises ValueError when no candidate fits the budget."""
+    if f_s_grid is None:
+        f_s_grid = default_f_s_grid(pcfg.f_s)
+    candidates = []
+    best = None
+    for n_buses in sorted(set(bus_counts)):
+        # the chip's failed buses ride along: a degraded chip is tuned (and
+        # its report priced) as the degraded chip it is — dead buses carry
+        # no panels and draw no power, exactly as the session will run it
+        cand_cfg = dataclasses.replace(pcfg, n_buses=n_buses)
+        n_alive = photonics.active_buses(cand_cfg)
+        for f_s in sorted(set(f_s_grid), reverse=True):
+            power = components.bank_power_w(cand_cfg, ecfg, f_s=f_s,
+                                            n_buses=n_alive)
+            if power_budget_w is not None and power > power_budget_w:
+                for tiling in tilings:
+                    candidates.append(Candidate(n_buses, tiling, f_s, power,
+                                                False, None, None))
+                continue
+            for tiling in tilings:
+                report = pipeline.simulate(
+                    workload, cand_cfg, ecfg, f_s=f_s, tiling=tiling,
+                    include_weight_update=include_weight_update)
+                cand = Candidate(n_buses, tiling, f_s, power, True,
+                                 report.wall_clock_s, report)
+                candidates.append(cand)
+                # fastest wins; ties go to the lower-power, fewer-bus chip
+                key = (report.wall_clock_s, power, n_buses)
+                if best is None or key < best[0]:
+                    best = (key, cand)
+    if best is None:
+        min_power = min(c.power_w for c in candidates)
+        raise ValueError(
+            f"no schedule fits power_budget_w={power_budget_w:.2f} "
+            f"(cheapest candidate needs {min_power:.2f} W)")
+    _, cand = best
+    return TunedSchedule(
+        n_buses=cand.n_buses, tiling=cand.tiling, f_s=cand.f_s,
+        power_w=cand.power_w, report=cand.report,
+        power_budget_w=power_budget_w, candidates=tuple(candidates))

@@ -402,3 +402,128 @@ def test_bus_scaling_bench_schema(tmp_path):
     for k in ("acc_b1", "acc_b2", "cycles_b1", "pj_per_mac_b2",
               "cycle_speedup", "acc_spread_pts"):
         assert k in report["metrics"]
+
+
+# ---------------------------------------------------------------------------
+# bus yield / failure (dead rings, failed buses)
+# ---------------------------------------------------------------------------
+
+def test_active_buses_and_schedule_stretch():
+    cfg = photonics.PhotonicConfig(n_buses=4, failed_buses=(1, 3))
+    assert photonics.active_buses(cfg) == 2
+    assert photonics.alive_bus_indices(cfg) == (0, 2)
+    healthy = photonics.PhotonicConfig(n_buses=4)
+    # panels reroute onto the 2 survivors: the schedule stretches to the
+    # 2-bus length, never crashes
+    assert photonics.n_bank_passes(200, cfg) == photonics.n_bank_passes(
+        200, photonics.PhotonicConfig(n_buses=2))
+    assert photonics.gemm_cycles(100, 200, cfg) > photonics.gemm_cycles(
+        100, 200, healthy)
+    with pytest.raises(ValueError, match="all .* buses failed"):
+        photonics.active_buses(
+            photonics.PhotonicConfig(n_buses=2, failed_buses=(0, 1)))
+
+
+def test_failed_bus_matmul_matches_alive_bus_count():
+    """The emu product on a chip with a dead bus equals the product on a
+    healthy chip with the surviving bus count (same rerouted schedule)."""
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (6, 61))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (40, 61))
+    failed = photonics.PhotonicConfig(n_buses=3, failed_buses=(1,), mrr=IDEAL)
+    alive = photonics.PhotonicConfig(n_buses=2, mrr=IDEAL)
+    out_failed = channel.emulated_matmul(a, b, failed)
+    out_alive = channel.emulated_matmul(a, b, alive)
+    np.testing.assert_allclose(np.asarray(out_failed), np.asarray(out_alive),
+                               rtol=1e-5)
+    # and the bus-tiled layout only spans the survivors
+    a_t, b_t, _ = channel.tile_operands(a, b, failed)
+    assert a_t.shape[1] == 2 and b_t.shape[1] == 2
+
+
+def test_failed_bus_selects_matching_drift_state():
+    """Carried drift state keeps the physical (n_buses, rows, cols) shape;
+    the signal chain reads the alive banks' rows only."""
+    cfg = photonics.PhotonicConfig(n_buses=3, failed_buses=(0,), mrr=IDEAL)
+    key = jax.random.PRNGKey(2)
+    a = jax.random.normal(key, (4, 45))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (30, 45))
+    state = drift.init_state(cfg)
+    # big residual on the DEAD bus only: must not perturb the output
+    state["drift"] = state["drift"].at[0].set(3.0)
+    with drift.use_state(state):
+        perturbed = channel.emulated_matmul(a, b, cfg)
+    clean = channel.emulated_matmul(a, b, cfg)
+    np.testing.assert_allclose(np.asarray(perturbed), np.asarray(clean),
+                               rtol=1e-6)
+
+
+def test_dead_rings_degrade_not_crash():
+    """Fabrication yield: dead rings zero their weights — the projection
+    stays finite and close-ish to exact, degrading with the dead rate."""
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (8, 40))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (50, 40))
+    exact = a @ b.T
+    errs = []
+    for rate in (0.0, 0.02, 0.2):
+        cfg = photonics.PhotonicConfig(
+            n_buses=2, mrr=dataclasses.replace(IDEAL, dead_ring_rate=rate))
+        out = np.asarray(channel.emulated_matmul(a, b, cfg))
+        assert np.all(np.isfinite(out))
+        errs.append(np.abs(out - np.asarray(exact)).max())
+    assert errs[0] == pytest.approx(0.0, abs=1e-4)  # rate 0: no mask
+    assert errs[0] <= errs[1] <= errs[2]
+    assert errs[2] > errs[1]  # a 20% dead chip is visibly worse
+
+
+def test_dead_ring_mask_deterministic_chip_property():
+    device = dataclasses.replace(IDEAL, dead_ring_rate=0.1, yield_seed=7)
+    m1 = np.asarray(mrr.dead_ring_mask(device, (2, 50, 20)))
+    m2 = np.asarray(mrr.dead_ring_mask(device, (2, 50, 20)))
+    np.testing.assert_array_equal(m1, m2)
+    other = np.asarray(mrr.dead_ring_mask(
+        dataclasses.replace(device, yield_seed=8), (2, 50, 20)))
+    assert np.abs(m1 - other).max() > 0  # a different chip
+    assert 0.8 < m1.mean() < 0.98  # ~10% dead
+
+
+def test_training_degrades_gracefully_with_yield_faults():
+    """Acceptance: a chip with a failed bus AND dead rings still trains —
+    loss decreases and stays finite instead of crashing."""
+    device = mrr.MRRConfig(adc_bits=10, drift_sigma=0.0, cal_noise=0.0,
+                           dead_ring_rate=0.05)
+    hw = photonics.PhotonicConfig(n_buses=3, failed_buses=(1,),
+                                  noise_std=0.019, mrr=device)
+    session = api.build_session(arch="mnist_mlp", smoke=True, algo="dfa",
+                                hardware=hw, backend="emu", log_every=10**9)
+    batch = _batch(session.model, jax.random.PRNGKey(5), n=32)
+    state = session.init_state()
+    (loss0, _), _ = session.value_and_grad()(
+        state["params"], state["fb"], batch, jax.random.PRNGKey(0))
+    state, metrics = session.fit(lambda step: batch, total_steps=12,
+                                 verbose=False)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) < float(loss0)
+
+
+def test_failed_bus_crosstalk_respects_physical_topology():
+    """Inter-bus thermal coupling follows the PHYSICAL bank stack: a dead
+    (undriven) bank between two survivors separates them, so a degraded
+    3-bus chip is NOT the same device as a healthy 2-bus chip — unless
+    the dead bank sits at the end of the stack, where it shields nothing."""
+    device = dataclasses.replace(IDEAL, bus_crosstalk=0.05)
+    key = jax.random.PRNGKey(7)
+    a = jax.random.normal(key, (5, 45))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (30, 45))
+
+    def out(n_buses, failed=()):
+        cfg = photonics.PhotonicConfig(n_buses=n_buses, failed_buses=failed,
+                                       mrr=device)
+        return np.asarray(channel.emulated_matmul(a, b, cfg))
+
+    # dead middle bank: survivors 0 and 2 are separated -> different from
+    # a healthy 2-bus chip whose banks are adjacent
+    assert np.abs(out(3, (1,)) - out(2)).max() > 1e-6
+    # dead END bank: survivors 0 and 1 keep their adjacency -> identical
+    np.testing.assert_allclose(out(3, (2,)), out(2), rtol=1e-6)

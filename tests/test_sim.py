@@ -1,0 +1,218 @@
+"""repro.sim: schedule replay fidelity, energy cross-check, autotuner
+feasibility, and the BENCH_pipeline schema round-trip."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro import api, sim
+from repro.core import energy, photonics
+
+QWEN_LAYERS = 24
+QWEN_D = 1024
+
+
+def _qwen_workload(t=64):
+    model = api.build_model("qwen1.5-0.5b")  # shape-only, no params
+    work = sim.dfa_backward_workload(model, t=t)
+    assert len(work) == QWEN_LAYERS
+    assert work[0].m == work[0].k == QWEN_D
+    return work
+
+
+# ---------------------------------------------------------------------------
+# cycle-count identity with the static scheduling math
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_buses", [1, 2, 5])
+@pytest.mark.parametrize("m,k", [(50, 20), (73, 61), (800, 10), (1024, 1024)])
+def test_cycle_identity_with_gemm_cycles(n_buses, m, k):
+    """The simulator's per-GEMM schedule length IS ``photonics.gemm_cycles``
+    — both read the same tiling; indivisible panel counts included."""
+    cfg = photonics.PhotonicConfig(n_buses=n_buses)
+    g = sim.Gemm("g", t=1, m=m, k=k)
+    r = sim.simulate([g], cfg, include_weight_update=False)
+    assert r.cycles == photonics.gemm_cycles(m, k, cfg)
+    assert r.cycles_per_gemm["g"] == photonics.gemm_cycles(m, k, cfg)
+    # and the bus-cycle count is the emulator's own ceiling division
+    nm, n_alive, nj, n_panels = sim.panel_schedule(g, cfg)
+    assert n_alive == n_buses
+    assert nj == photonics.n_bank_passes(k, cfg)
+    assert n_panels == photonics.n_contraction_panels(k, cfg)
+
+
+def test_panel_schedule_counts_real_panels():
+    """Real slots across buses == nm × n_panels (idle-bus padding excluded
+    from useful work, exactly as ``bank_product`` noise-masks it)."""
+    cfg = photonics.PhotonicConfig(n_buses=2)
+    g = sim.Gemm("g", t=4, m=73, k=61)  # 4 panels over 2 buses, nm=2
+    nm, nb, nj, n_panels = sim.panel_schedule(g, cfg)
+    real = nm * n_panels
+    r = sim.simulate([g], cfg, include_weight_update=False)
+    assert sum(r.bus_busy_s) == pytest.approx(
+        real * g.t / cfg.f_s, rel=1e-9)
+
+
+def test_failed_bus_lengthens_schedule():
+    """Bus yield: panels reroute onto the survivors and the schedule
+    stretches by the static model's own ceiling."""
+    ok = photonics.PhotonicConfig(n_buses=4)
+    degraded = dataclasses.replace(ok, failed_buses=(2,))
+    g = sim.Gemm("g", t=8, m=200, k=400)  # 20 panels
+    r_ok = sim.simulate([g], ok, include_weight_update=False)
+    r_bad = sim.simulate([g], degraded, include_weight_update=False)
+    assert r_bad.n_buses == 3
+    assert r_ok.cycles == photonics.gemm_cycles(200, 400, ok)
+    assert r_bad.cycles == photonics.gemm_cycles(200, 400, degraded)
+    assert r_bad.wall_clock_s > r_ok.wall_clock_s
+
+
+# ---------------------------------------------------------------------------
+# energy cross-check against core/energy.py (Eq. 2/4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_buses", [1, 2, 4])
+def test_energy_agrees_with_static_model(n_buses):
+    """Simulated power × streaming makespan lands within 1% of the static
+    Eq. 2/4 pricing (``energy.dfa_backward_cost``) on a deep workload —
+    the cross-check is real: the sim integrates its event timeline (fills
+    included), the static model multiplies cycle counts."""
+    t = 64
+    work = [sim.Gemm(f"l{i}", t=t, m=QWEN_D, k=QWEN_D)
+            for i in range(QWEN_LAYERS)]
+    pcfg = photonics.PhotonicConfig(n_buses=n_buses)
+    ecfg = energy.EnergyConfig(n_buses=n_buses)
+    r = sim.simulate(work, pcfg, ecfg, include_weight_update=False)
+    static = energy.dfa_backward_cost([QWEN_D] * QWEN_LAYERS, QWEN_D, ecfg)
+    assert r.energy_compute_j == pytest.approx(static["energy_j"] * t,
+                                               rel=0.01)
+    assert r.cycles == static["cycles"]
+    assert r.power_w == pytest.approx(
+        energy.total_power(pcfg.bank_rows, pcfg.bank_cols, ecfg), rel=1e-9)
+
+
+def test_shared_comb_amortises_laser_power():
+    """Satellite: one comb source across the buses — the Eq. 3 laser floor
+    is paid once, every other Eq. 4 term stays per-bus."""
+    per_bus = energy.EnergyConfig(n_buses=4)
+    shared = dataclasses.replace(per_bus, shared_comb=True)
+    single = energy.EnergyConfig(n_buses=1)
+    saved = 3 * 20 * energy.laser_power(50, per_bus)  # 3 extra laser stacks
+    assert energy.total_power(50, 20, shared) == pytest.approx(
+        energy.total_power(50, 20, per_bus) - saved, rel=1e-12)
+    # degenerate case: one bus — sharing changes nothing
+    assert energy.total_power(50, 20, dataclasses.replace(
+        single, shared_comb=True)) == energy.total_power(50, 20, single)
+    # and E_op improves accordingly at 4 buses
+    assert (energy.energy_per_op(50, 20, shared)
+            < energy.energy_per_op(50, 20, per_bus))
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+def test_autotune_respects_power_budget():
+    work = _qwen_workload()
+    pcfg = photonics.PhotonicConfig()
+    budget = sim.bank_power_w(pcfg, n_buses=2)  # room for exactly 2 buses
+    tuned = sim.autotune(work, pcfg, power_budget_w=budget)
+    assert tuned.power_w <= budget
+    assert tuned.n_buses <= 2
+    for cand in tuned.candidates:
+        if cand.feasible:
+            assert cand.power_w <= budget
+
+
+def test_autotune_beats_single_bus_default_on_qwen_backward():
+    """Acceptance: the tuned schedule is strictly faster than the default
+    n_buses=1 schedule on the qwen1.5-0.5b backward."""
+    work = _qwen_workload()
+    pcfg = photonics.PhotonicConfig()
+    default = sim.simulate(work, pcfg)
+    tuned = sim.autotune(work, pcfg,
+                         power_budget_w=sim.bank_power_w(pcfg, n_buses=4))
+    assert tuned.wall_clock_s < default.wall_clock_s
+    assert tuned.n_buses > 1
+    # and applying the schedule configures the session's hardware
+    applied = tuned.apply(pcfg)
+    assert applied.n_buses == tuned.n_buses
+    assert applied.f_s == tuned.f_s
+
+
+def test_autotune_infeasible_budget_raises():
+    work = [sim.Gemm("g", t=1, m=50, k=20)]
+    with pytest.raises(ValueError, match="no schedule fits"):
+        sim.autotune(work, photonics.PhotonicConfig(), power_budget_w=0.1)
+
+
+def test_build_session_schedule_auto():
+    """api.build_session(schedule="auto") runs the tuner on the session's
+    own model and configures the photonics accordingly."""
+    session = api.build_session(arch="qwen1.5-0.5b", smoke=True,
+                                schedule="auto", log_every=10**9)
+    assert session.schedule is not None
+    hw = session.config.dfa.photonics
+    assert hw.n_buses == session.schedule.n_buses
+    assert hw.f_s == session.schedule.f_s
+    # a pinned bus count narrows the search instead of being overridden
+    pinned = api.build_session(arch="mnist_mlp", smoke=True, n_buses=2,
+                               schedule="auto", log_every=10**9)
+    assert pinned.config.dfa.photonics.n_buses == 2
+    with pytest.raises(ValueError, match="unknown schedule"):
+        api.build_session(arch="mnist_mlp", smoke=True, schedule="fastest")
+
+
+# ---------------------------------------------------------------------------
+# report plumbing + BENCH_pipeline schema
+# ---------------------------------------------------------------------------
+
+def test_occupancy_and_utilisation_sane():
+    r = sim.simulate(_qwen_workload(), photonics.PhotonicConfig(n_buses=2))
+    assert 0.0 < r.utilisation <= 1.0
+    for stage in sim.STAGES:
+        assert 0.0 < r.occupancy[stage] <= 1.0
+    assert r.weight_update_s > 0.0  # heater epilogue on by default
+    assert r.wall_clock_s == pytest.approx(
+        r.compute_s + r.weight_update_s)
+    assert r.macs == sum(g.macs for g in _qwen_workload())
+
+
+def test_bench_pipeline_schema_roundtrip(tmp_path):
+    from benchmarks import pipeline_sim
+
+    results = pipeline_sim.run(bus_counts=(1, 2), t=8)
+    path = pipeline_sim.write_report(results, str(tmp_path))
+    assert path.endswith("BENCH_pipeline.json")
+    from repro.bench import load_bench
+
+    report = load_bench(path)
+    assert report["name"] == "pipeline"
+    m = report["metrics"]
+    assert m["qwen1_5_0_5b_b2_wall_us"] < m["qwen1_5_0_5b_b1_wall_us"]
+    assert m["qwen1_5_0_5b_auto_speedup_vs_b1"] > 1.0
+
+
+def test_autotune_prices_degraded_chip_honestly():
+    """A chip with a failed bus is tuned AS the degraded chip: candidate
+    schedules and power both see only the surviving buses, and the tuned
+    config still carries the failure."""
+    work = _qwen_workload(t=8)
+    degraded = photonics.PhotonicConfig(n_buses=4, failed_buses=(1,))
+    tuned = sim.autotune(work, degraded, bus_counts=(4,),
+                         f_s_grid=(degraded.f_s,), tilings=("panel",))
+    healthy3 = sim.simulate(
+        work, photonics.PhotonicConfig(n_buses=3), tiling="panel")
+    assert tuned.report.n_buses == 3
+    assert tuned.wall_clock_s == pytest.approx(healthy3.wall_clock_s)
+    assert tuned.power_w == pytest.approx(healthy3.power_w)
+    assert tuned.apply(degraded).failed_buses == (1,)
+
+
+def test_budget_kwargs_require_auto_schedule():
+    with pytest.raises(ValueError, match="require schedule='auto'"):
+        api.build_session(arch="mnist_mlp", smoke=True, power_budget_w=50.0)
+    with pytest.raises(ValueError, match="require schedule='auto'"):
+        api.build_session(arch="mnist_mlp", smoke=True, schedule_batch=32)
