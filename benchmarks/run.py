@@ -29,10 +29,13 @@ plus the drift/recalibration study (``benchmarks.drift_recovery``) as
 ``BENCH_hardware.json``, the multi-wavelength scale-out sweep
 (``benchmarks.bus_scaling``) as ``BENCH_bus_scaling.json``, the repro.sim
 timing study (``benchmarks.pipeline_sim``) as ``BENCH_pipeline.json``,
-and the roofline + photonic-backward parity numbers (auto-generating the
-dry-run record when missing) as ``BENCH_roofline.json``; combined with
-``--smoke`` it also writes ``BENCH_smoke.json``.  CI archives the
-``BENCH_*.json`` files — they are the repo's perf trajectory.
+the roofline + photonic-backward parity numbers (auto-generating the
+dry-run record when missing) as ``BENCH_roofline.json``, and the
+request-level serving study (``benchmarks.serving``: p50/p99 TTFT and
+latency, requests/s and J/request vs offered load + the SLO-constrained
+serving autotuner) as ``BENCH_serving.json``; combined with ``--smoke``
+it also writes ``BENCH_smoke.json``.  CI archives the ``BENCH_*.json``
+files — they are the repo's perf trajectory.
 """
 
 from __future__ import annotations
@@ -326,6 +329,17 @@ def bench_pipeline(out_dir: str = ".") -> str:
     return path
 
 
+def bench_serving(out_dir: str = ".") -> str:
+    """Run the request-level serving study (p50/p99 TTFT + latency,
+    requests/s, J/request vs offered load, plus the SLO-constrained
+    serving autotuner) and write BENCH_serving.json."""
+    sv = _sibling("serving")
+
+    path = sv.write_report(sv.run(), out_dir)
+    print(f"[bench] wrote {path}", flush=True)
+    return path
+
+
 def _ensure_dryrun(path: str, arch: str = "qwen1.5-0.5b") -> str:
     """Auto-generate the dry-run record the roofline needs (one train cell
     on the single-pod mesh, ~10 s) when none exists yet.  Runs in a
@@ -408,6 +422,7 @@ def main() -> None:
         bench_bus_scaling(out_dir=args.bench_dir, steps=args.bus_steps)
         bench_pipeline(out_dir=args.bench_dir)
         bench_roofline(out_dir=args.bench_dir)
+        bench_serving(out_dir=args.bench_dir)
         return
     print("name,us_per_call,derived")
     for name, fn in TABLES:

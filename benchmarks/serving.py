@@ -1,0 +1,168 @@
+"""Request-level serving study (repro.sim.serving): p50/p99 TTFT and
+end-to-end latency, requests/s, bank utilisation and J/request of the
+photonic serving plane vs offered load — plus the SLO-constrained
+autotuner's pick against the default single-bus chip.
+
+The load sweep measures the saturated capacity of the default single-bus
+configuration first and then offers Poisson traffic at fixed fractions of
+it, so the latency/throughput shape is stable across model or timing
+changes.  The autotune row offers MORE traffic than one bus can clear and
+asks ``sim.autotune_serving`` for the cheapest (n_buses, f_s, batch_slots)
+that holds p99 end-to-end latency under an SLO within a 4-bus power
+budget — the serving dual of ``benchmarks/pipeline_sim.py``'s tuner row.
+
+Emits ``BENCH_serving.json`` (schema repro.bench/v1);
+``benchmarks/run.py --bench`` runs it and CI requires the file.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro import api, sim
+from repro.core import photonics
+
+ARCH = "qwen1.5-0.5b"
+N_REQUESTS = 96
+PROMPT_LEN = 64
+DECODE_LEN = 32
+BATCH_SLOTS = 8
+PREFILL_CHUNK = 16
+LOAD_FRACTIONS = (0.3, 0.6, 0.9)
+
+
+def _row(report, frac: float) -> dict:
+    return {
+        "load_fraction": frac,
+        "offered_rate": report.offered_rate,
+        "requests_per_s": report.requests_per_s,
+        "ttft_p50_ms": report.ttft_p50_s * 1e3,
+        "ttft_p99_ms": report.ttft_p99_s * 1e3,
+        "latency_p50_ms": report.latency_p50_s * 1e3,
+        "latency_p99_ms": report.latency_p99_s * 1e3,
+        "utilisation": report.utilisation,
+        "power_w": report.power_w,
+        "j_per_request": report.j_per_request,
+    }
+
+
+def capacity(svc, *, batch_slots: int = BATCH_SLOTS) -> float:
+    """Saturated requests/s of one configuration: everything arrives at
+    once, so the achieved rate IS the service capacity."""
+    burst = [sim.RequestSpec(arrival_s=0.0, prompt_len=PROMPT_LEN,
+                             decode_len=DECODE_LEN)] * N_REQUESTS
+    rep = sim.simulate_serving(burst, svc, batch_slots=batch_slots,
+                               prefill_chunk=PREFILL_CHUNK)
+    return rep.requests_per_s
+
+
+def run(fractions=LOAD_FRACTIONS, n: int = N_REQUESTS) -> dict:
+    model = api.build_model(ARCH)
+    pcfg = photonics.PhotonicConfig()  # default single-bus chip
+    svc = sim.service_model(model, pcfg)
+    cap = capacity(svc)
+
+    sweep = []
+    for frac in fractions:
+        reqs = sim.poisson_requests(frac * cap, n, prompt_len=PROMPT_LEN,
+                                    decode_len=DECODE_LEN, seed=17)
+        rep = sim.simulate_serving(reqs, svc, batch_slots=BATCH_SLOTS,
+                                   prefill_chunk=PREFILL_CHUNK)
+        sweep.append(_row(rep, frac))
+
+    # --- SLO autotune: offer more than one bus can clear ---
+    overload = sim.poisson_requests(1.5 * cap, n, prompt_len=PROMPT_LEN,
+                                    decode_len=DECODE_LEN, seed=23)
+    default_rep = sim.simulate_serving(overload, svc, batch_slots=BATCH_SLOTS,
+                                       prefill_chunk=PREFILL_CHUNK)
+    slo_p99_s = 0.5 * default_rep.latency_p99_s
+    budget = sim.bank_power_w(pcfg, n_buses=4)
+    tuned = sim.autotune_serving(model, overload, pcfg,
+                                 slo_p99_s=slo_p99_s,
+                                 power_budget_w=budget,
+                                 bus_counts=(1, 2, 4),
+                                 prefill_chunk=PREFILL_CHUNK)
+    autotune = {
+        "n_buses": tuned.n_buses, "f_s_ghz": tuned.f_s / 1e9,
+        "batch_slots": tuned.batch_slots, "power_w": tuned.power_w,
+        "power_budget_w": budget,
+        "slo_p99_ms": slo_p99_s * 1e3,
+        "p99_latency_ms": tuned.report.latency_p99_s * 1e3,
+        "slo_margin_ms": (slo_p99_s - tuned.report.latency_p99_s) * 1e3,
+        "requests_per_s": tuned.report.requests_per_s,
+        "default_requests_per_s": default_rep.requests_per_s,
+        "default_p99_latency_ms": default_rep.latency_p99_s * 1e3,
+        "speedup_vs_default": (tuned.report.requests_per_s
+                               / default_rep.requests_per_s),
+        "j_per_request": tuned.report.j_per_request,
+    }
+    return {"arch": ARCH, "capacity_req_per_s": cap, "sweep": sweep,
+            "autotune": autotune}
+
+
+def bench_metrics(results: dict) -> dict:
+    metrics = {"capacity_req_per_s": results["capacity_req_per_s"]}
+    for r in results["sweep"]:
+        p = f"load{int(round(r['load_fraction'] * 100)):02d}_"
+        metrics[p + "requests_per_s"] = r["requests_per_s"]
+        metrics[p + "ttft_p50_ms"] = r["ttft_p50_ms"]
+        metrics[p + "ttft_p99_ms"] = r["ttft_p99_ms"]
+        metrics[p + "latency_p50_ms"] = r["latency_p50_ms"]
+        metrics[p + "latency_p99_ms"] = r["latency_p99_ms"]
+        metrics[p + "j_per_request"] = r["j_per_request"]
+        metrics[p + "utilisation"] = r["utilisation"]
+    a = results["autotune"]
+    metrics.update({
+        "auto_n_buses": float(a["n_buses"]),
+        "auto_f_s_ghz": a["f_s_ghz"],
+        "auto_batch_slots": float(a["batch_slots"]),
+        "auto_power_w": a["power_w"],
+        "auto_p99_latency_ms": a["p99_latency_ms"],
+        "auto_slo_margin_ms": a["slo_margin_ms"],
+        "auto_requests_per_s": a["requests_per_s"],
+        "auto_speedup_vs_default": a["speedup_vs_default"],
+        "auto_j_per_request": a["j_per_request"],
+    })
+    return metrics
+
+
+def write_report(results: dict, out_dir: str = ".") -> str:
+    from repro.bench import write_bench
+
+    return write_bench("serving", bench_metrics(results),
+                       meta={"n_requests": N_REQUESTS,
+                             "prompt_len": PROMPT_LEN,
+                             "decode_len": DECODE_LEN,
+                             "batch_slots": BATCH_SLOTS,
+                             "prefill_chunk": PREFILL_CHUNK, **results},
+                       out_dir=out_dir)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=N_REQUESTS)
+    ap.add_argument("--bench-dir", default=None, metavar="DIR",
+                    help="also write BENCH_serving.json into DIR")
+    args = ap.parse_args()
+    results = run(n=args.requests)
+    print(f"serving: {results['arch']} single-bus capacity "
+          f"{results['capacity_req_per_s']:.1f} req/s")
+    print("load,req/s,ttft_p50_ms,ttft_p99_ms,lat_p50_ms,lat_p99_ms,J/req")
+    for r in results["sweep"]:
+        print(f"{r['load_fraction']:.1f},{r['requests_per_s']:.1f},"
+              f"{r['ttft_p50_ms']:.2f},{r['ttft_p99_ms']:.2f},"
+              f"{r['latency_p50_ms']:.2f},{r['latency_p99_ms']:.2f},"
+              f"{r['j_per_request']:.4f}")
+    a = results["autotune"]
+    print(f"[autotune] n_buses={a['n_buses']} f_s={a['f_s_ghz']:.2f}GHz "
+          f"batch_slots={a['batch_slots']} -> p99 {a['p99_latency_ms']:.2f}ms "
+          f"<= SLO {a['slo_p99_ms']:.2f}ms (margin {a['slo_margin_ms']:.2f}ms), "
+          f"{a['requests_per_s']:.1f} req/s "
+          f"({a['speedup_vs_default']:.2f}x vs default 1-bus), "
+          f"{a['power_w']:.1f}W <= {a['power_budget_w']:.1f}W")
+    if args.bench_dir is not None:
+        print(f"[bench] wrote {write_report(results, args.bench_dir)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,10 @@ instance).  Everything else is optional with paper-faithful defaults
 ``power_budget_w`` is simulated from the emulator's real panel schedule
 and applied to the session's photonics; the winning ``TunedSchedule``
 (timeline report included) is kept on ``Session.schedule``.
+
+``Session.engine()`` opens the serving plane on the same cell: a
+continuous-batching ``serve.Engine`` whose forward projections run on
+the session's photonic backend (``launch/serve.py`` is the CLI).
 """
 
 from __future__ import annotations
@@ -43,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 import typing
 
+import jax
 import jax.numpy as jnp
 
 from repro import algos, configs
@@ -120,6 +125,36 @@ class Session:
 
     def evaluate(self, state, batches) -> dict:
         return self.trainer.evaluate(state, batches)
+
+    # ---- serving ----
+    def engine(self, params=None, *, batch_slots: int = 8, max_len: int = 512,
+               eos_id: int | None = None, prefill_chunk: int = 16,
+               hw_state=None, seed: int = 0):
+        """A ``serve.Engine`` on this session's (hardware, backend) cell.
+
+        The session's backend choice carries over: ``auto``/``ref`` with
+        photonics disabled serves the exact digital forward; ``emu`` (or an
+        enabled photonic config) routes every forward projection through
+        the same banks training used — drift, crosstalk, quantisation and
+        all.  ``params`` defaults to a fresh ``model.init``.
+        """
+        from repro.serve import Engine
+
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed))
+        hw_cfg = self.config.dfa.photonics
+        backend = self.config.dfa.backend
+        if not isinstance(backend, str):
+            backend = "ref"
+        if backend == "auto" and hw_cfg.enabled:
+            backend = "ref"
+        if not hw_cfg.enabled:
+            backend = None
+        return Engine(self.model, params, batch_slots=batch_slots,
+                      max_len=max_len, eos_id=eos_id,
+                      prefill_chunk=prefill_chunk, backend=backend,
+                      photonics=hw_cfg if backend is not None else None,
+                      hw_state=hw_state, seed=seed)
 
 
 def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",

@@ -33,6 +33,7 @@ Noise conventions:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 
@@ -334,3 +335,72 @@ def photonic_project(e, b, cfg: PhotonicConfig, key=None, *, mask=None,
     m2 = mask.reshape(-1, mask.shape[-1]) if mask is not None else None
     out = get_backend(backend).matmul(e2, b, cfg, key=key, mask=m2)
     return out.reshape(*lead, b.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Forward-execution context (photonic inference)
+# ---------------------------------------------------------------------------
+# Training runs only the DFA feedback projections on the photonic banks;
+# inference (repro.serve) runs the *forward* weight matrices through them.
+# Rather than thread (cfg, backend, key) through every Linear/Attention
+# call signature, the serve engine pushes a ForwardExecution context while
+# tracing its jitted step — the same pattern as ``hardware.drift.use_state``
+# — and ``forward_matmul`` below is the single seam every weight-stationary
+# projection in nn/ and models/ calls.  Outside any context (or with
+# ``cfg.enabled`` False) it is literally ``x @ w``: the training and
+# digital-serving paths are bit-identical to before the seam existed.
+
+_FORWARD: list = []
+
+
+class ForwardExecution:
+    """One photonic forward pass: config + backend + a PRNG stream that
+    hands each routed matmul its own fold_in'd key (trace-order counter —
+    deterministic under jit because tracing order is)."""
+
+    def __init__(self, cfg: PhotonicConfig, backend, key=None):
+        self.cfg = cfg
+        self.backend = get_backend(backend)
+        self.key = key
+        self.calls = 0
+
+    def next_key(self):
+        if self.key is None:
+            return None
+        self.calls += 1
+        return jax.random.fold_in(self.key, self.calls)
+
+
+@contextlib.contextmanager
+def forward_execution(cfg: PhotonicConfig, backend="ref", key=None):
+    """Route every ``forward_matmul`` in the dynamic extent through
+    ``backend`` under ``cfg``.  Enter *inside* the traced function so the
+    key/state tracers belong to the consuming trace (cf. drift.use_state)."""
+    ctx = ForwardExecution(cfg, backend, key)
+    _FORWARD.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _FORWARD.pop()
+
+
+def active_forward() -> ForwardExecution | None:
+    return _FORWARD[-1] if _FORWARD else None
+
+
+def forward_matmul(x, w):
+    """``x @ w`` with x: (..., K), w: (K, M) — THE forward projection seam.
+
+    Digital (no active context / ``enabled=False``): exact ``x @ w``.
+    Photonic: flatten leading dims to a (T, K) stream and run the weight
+    bank product through the context's backend — the emu backend then
+    prices in inscription error, quantisation, crosstalk, and any active
+    drift state.  Biases, norms, and activations stay electronic (they are
+    TIA-side ops, not bank products)."""
+    ctx = active_forward()
+    if ctx is None or not ctx.cfg.enabled:
+        return x @ w
+    lead = x.shape[:-1]
+    a = x.reshape(-1, x.shape[-1])
+    out = ctx.backend.matmul(a, w.T, ctx.cfg, key=ctx.next_key())
+    return out.reshape(*lead, w.shape[-1]).astype(jnp.result_type(x, w))

@@ -67,6 +67,14 @@ class DFAModel(Module):
     def segment_specs(self) -> tuple[SegmentSpec, ...]:
         raise NotImplementedError
 
+    def forward_gemm_specs(self) -> list:
+        """(name, m, k) of every weight-stationary forward projection of one
+        streamed token — the serving analogue of ``segment_specs``, consumed
+        by ``sim.pipeline.forward_workload``.  LMs implement it; models that
+        are not served (whisper, the MNIST MLP head aside) may not."""
+        raise NotImplementedError(
+            f"{type(self).__name__} declares no forward GEMM workload")
+
     # --- forward parts ---
     def embed(self, params, batch):
         raise NotImplementedError

@@ -13,6 +13,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.photonics import forward_matmul
 from repro.dist.sharding import annotate, unshard_fsdp
 from repro.models.base import DFAModel, SavedSegment, SegmentSpec, cross_entropy_loss
 from repro.nn.embeddings import Embedding
@@ -158,4 +159,27 @@ class MambaLM(DFAModel):
 
         x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
         h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x)
-        return h @ params["head"]["out"]["w"], new_caches
+        logits = forward_matmul(h, params["head"]["out"]["w"])
+        if c.pad_vocab_to:
+            pad_mask = jnp.arange(c.v_padded) >= c.vocab_size
+            logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+        return logits, new_caches
+
+    def forward_gemm_specs(self):
+        """(name, m, k) of the per-token forward projections (see
+        ``sim.pipeline.forward_workload``): the fused input projection,
+        the output projection, and the unembedding.  Convolutions and the
+        diagonal SSD recurrence are not bank products."""
+        c = self.cfg
+        d_inner = c.expand * c.d_model
+        n_heads = d_inner // c.head_dim
+        conv_dim = d_inner + 2 * c.d_state  # n_groups == 1
+        per_layer = [
+            ("mixer.in_proj", d_inner + conv_dim + n_heads, c.d_model),
+            ("mixer.out_proj", c.d_model, d_inner),
+        ]
+        specs = []
+        for i in range(c.n_layers):
+            specs += [(f"blocks[{i}].{n}", m, k) for (n, m, k) in per_layer]
+        specs.append(("head.unembed", c.v_padded, c.d_model))
+        return specs

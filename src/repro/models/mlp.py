@@ -42,6 +42,12 @@ class MLPClassifier(DFAModel):
             for i in range(len(self.hidden))
         ]
 
+    def forward_gemm_specs(self):
+        dims = (self.in_dim,) + tuple(self.hidden)
+        specs = [(f"h{i}", dims[i + 1], dims[i]) for i in range(len(self.hidden))]
+        specs.append(("head", self.n_classes, self.hidden[-1]))
+        return specs
+
     def segment_specs(self):
         specs = []
         for i, blk in enumerate(self._blocks()):

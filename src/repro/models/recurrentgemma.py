@@ -17,6 +17,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.photonics import forward_matmul
 from repro.dist.sharding import annotate, unshard_fsdp
 from repro.models.base import DFAModel, SavedSegment, SegmentSpec, cross_entropy_loss
 from repro.nn.attention import Attention
@@ -252,4 +253,31 @@ class RecurrentGemmaLM(DFAModel):
             x, nt = jax.lax.scan(tail_body, x, (params["tail_rec"], caches["tail_rec"]))
             new_caches["tail_rec"] = nt
         h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x)
-        return h @ params["head"]["out"]["w"], new_caches
+        return forward_matmul(h, params["head"]["out"]["w"]), new_caches
+
+    def forward_gemm_specs(self):
+        """(name, m, k) per-token forward projections (see
+        ``sim.pipeline.forward_workload``).  Recurrent layers carry the
+        RG-LRU block's five projections; attention layers the q/k/v/o set;
+        every layer a gated MLP; plus the unembedding.  Convolutions and
+        the diagonal recurrence are not bank products."""
+        c = self.cfg
+        d, dr = c.d_model, c.d_rnn or c.d_model
+        hd = d // c.n_heads
+        mlp = [("mlp.gate", c.d_ff, d), ("mlp.up", c.d_ff, d), ("mlp.down", d, c.d_ff)]
+        rec = [("mixer.in_x", dr, d), ("mixer.in_gate", dr, d),
+               ("mixer.w_a", dr, dr), ("mixer.w_i", dr, dr),
+               ("mixer.out", d, dr)] + mlp
+        attn = [("attn.q", c.n_heads * hd, d), ("attn.k", c.n_kv_heads * hd, d),
+                ("attn.v", c.n_kv_heads * hd, d), ("attn.o", d, c.n_heads * hd)] + mlp
+        specs = []
+        layer = 0
+        for _ in range(c.n_groups):
+            for kind in (rec, rec, attn):
+                specs += [(f"layers[{layer}].{n}", m, k) for (n, m, k) in kind]
+                layer += 1
+        for _ in range(c.n_tail):
+            specs += [(f"layers[{layer}].{n}", m, k) for (n, m, k) in rec]
+            layer += 1
+        specs.append(("head.unembed", c.vocab_size, d))
+        return specs

@@ -15,6 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.photonics import forward_matmul
 from repro.dist.sharding import annotate, unshard_fsdp
 from repro.models.base import DFAModel, SavedSegment, SegmentSpec, cross_entropy_loss
 from repro.nn.attention import Attention, MLAttention
@@ -163,6 +164,23 @@ class DecoderBlock(Module):
             h = self._ffn()(params["ffn"], h)
         return x + h, cache
 
+    def prefill(self, params, x, cache, cache_len, n_valid):
+        """Chunked multi-token cache fill: x (B, C, d).  Padded (invalid)
+        chunk positions still flow through the FFN — harmless for dense
+        blocks; under MoE they can contend for expert capacity, a serving
+        approximation the dense configs never see."""
+        c = self.cfg
+        norm = RMSNorm(c.d_model, c.norm_eps, c.dtype)
+        h = norm(params["norm1"], x)
+        h, cache = self._attn().prefill(params["attn"], h, cache, cache_len, n_valid)
+        x = x + h
+        h = norm(params["norm2"], x)
+        if c.moe is not None:
+            h, _ = self._ffn()(params["ffn"], h)
+        else:
+            h = self._ffn()(params["ffn"], h)
+        return x + h, cache
+
 
 @dataclasses.dataclass(frozen=True)
 class TransformerLM(DFAModel):
@@ -232,11 +250,7 @@ class TransformerLM(DFAModel):
         del batch
         c = self.cfg
         h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x_final)
-        logits = h @ params["head"]["out"]["w"]
-        if c.pad_vocab_to:
-            pad_mask = jnp.arange(c.v_padded) >= c.vocab_size
-            logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
-        return annotate(logits, "logits")
+        return annotate(self._head(params, h), "logits")
 
     def loss_from_logits(self, logits, batch):
         c = self.cfg
@@ -267,4 +281,79 @@ class TransformerLM(DFAModel):
 
         x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
         h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x)
-        return h @ params["head"]["out"]["w"], new_caches
+        return self._head(params, h), new_caches
+
+    def _head(self, params, h):
+        """Unembedding with the same pad-vocab masking as ``head_logits`` —
+        greedy serving must never emit a padding token id."""
+        c = self.cfg
+        logits = forward_matmul(h, params["head"]["out"]["w"])
+        if c.pad_vocab_to:
+            pad_mask = jnp.arange(c.v_padded) >= c.vocab_size
+            logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+        return logits
+
+    @property
+    def supports_parallel_prefill(self) -> bool:
+        """Global-attention caches are absolute-indexed, so a whole prompt
+        chunk can be scattered and attended in one forward; windowed
+        (ring-buffer) variants must replay token-by-token."""
+        return self.cfg.window is None
+
+    def prefill_step(self, params, tokens, caches, cache_len, n_valid):
+        """tokens (B, C) -> (logits (B, C, V), new caches).  ``cache_len``
+        is NOT advanced here — the engine owns slot bookkeeping."""
+        c = self.cfg
+        x = Embedding(c.v_padded, c.d_model, c.dtype)(params["embed"]["tok"], tokens)
+
+        def body(x, xs):
+            bp, cache = xs
+            bp = unshard_fsdp(bp)
+            y, new_cache = self.block.prefill(bp, x, cache, cache_len, n_valid)
+            return y, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+        h = RMSNorm(c.d_model, c.norm_eps, c.dtype)(params["head"]["norm"], x)
+        return self._head(params, h), new_caches
+
+    def forward_gemm_specs(self):
+        """(name, m, k) of every weight-stationary forward projection of one
+        token — the GEMMs ``photonics.forward_matmul`` routes, consumed by
+        ``sim.pipeline.forward_workload``.  MoE counts router + the top-k
+        (+ shared) expert FFNs actually streamed per token."""
+        c = self.cfg
+        hd = c.head_dim or c.d_model // c.n_heads
+        per_layer = []
+        if c.mla is not None:
+            m = c.mla
+            per_layer += [
+                ("attn.q_down", m.q_lora_rank, c.d_model),
+                ("attn.q_up", c.n_heads * (m.qk_nope_dim + m.qk_rope_dim), m.q_lora_rank),
+                ("attn.kv_down", m.kv_lora_rank + m.qk_rope_dim, c.d_model),
+                ("attn.o", c.d_model, c.n_heads * m.v_head_dim),
+            ]
+        else:
+            per_layer += [
+                ("attn.q", c.n_heads * hd, c.d_model),
+                ("attn.k", c.n_kv_heads * hd, c.d_model),
+                ("attn.v", c.n_kv_heads * hd, c.d_model),
+                ("attn.o", c.d_model, c.n_heads * hd),
+            ]
+        if c.moe is not None:
+            mo = c.moe
+            ff = mo.top_k * mo.d_ff_expert
+            if mo.n_shared_experts:
+                ff += mo.n_shared_experts * (mo.d_ff_shared or mo.d_ff_expert)
+            per_layer.append(("ffn.router", mo.n_experts, c.d_model))
+        else:
+            ff = c.d_ff
+        per_layer += [
+            ("ffn.gate", ff, c.d_model),
+            ("ffn.up", ff, c.d_model),
+            ("ffn.down", c.d_model, ff),
+        ]
+        specs = []
+        for i in range(c.n_layers):
+            specs += [(f"blocks[{i}].{n}", m, k) for (n, m, k) in per_layer]
+        specs.append(("head.unembed", c.v_padded, c.d_model))
+        return specs

@@ -24,6 +24,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.photonics import forward_matmul
 from repro.nn.embeddings import apply_rotary, rotary_angles
 from repro.nn.linear import Linear
 from repro.nn.module import Module, named_key
@@ -227,7 +228,7 @@ class Attention(Module):
     def qkv(self, params, x, positions):
         b, s, _ = x.shape
         hd = self.hd
-        lin = lambda p, o, bias: (x @ p["w"] + (p["b"] if bias else 0.0))
+        lin = lambda p, o, bias: (forward_matmul(x, p["w"]) + (p["b"] if bias else 0.0))
         q = lin(params["q"], None, self.qkv_bias).reshape(b, s, self.n_heads, hd)
         k = lin(params["k"], None, self.qkv_bias).reshape(b, s, self.n_kv_heads, hd)
         v = lin(params["v"], None, self.qkv_bias).reshape(b, s, self.n_kv_heads, hd)
@@ -255,7 +256,7 @@ class Attention(Module):
                                   logit_softcap=self.logit_softcap,
                                   q_chunk=q_chunk, k_chunk=k_chunk)
         out = out.reshape(b, s, self.n_heads * self.hd)
-        y = out @ params["o"]["w"]
+        y = forward_matmul(out, params["o"]["w"])
         if self.out_bias:
             y = y + params["o"]["b"]
         return y
@@ -295,7 +296,35 @@ class Attention(Module):
         else:
             out = decode_attention(q, k_cache, v_cache, cache_len=cache_len + 1,
                                    window=self.window, logit_softcap=self.logit_softcap)
-        y = out.reshape(b, 1, self.n_heads * self.hd) @ params["o"]["w"]
+        y = forward_matmul(out.reshape(b, 1, self.n_heads * self.hd), params["o"]["w"])
+        if self.out_bias:
+            y = y + params["o"]["b"]
+        return y, {"k": k_cache, "v": v_cache}
+
+    def prefill(self, params, x, cache, cache_len, n_valid):
+        """Chunked cache fill: x (B, C, d) is the next C prompt tokens of
+        every slot (per-slot validity ``n_valid``), written at absolute
+        positions ``cache_len + j`` and attended causally against the whole
+        cache in ONE batched forward.  Invalid positions scatter out of
+        bounds and are dropped (``mode="drop"``), so slots past their
+        prompt (n_valid == 0 included) leave the cache untouched.  Only for
+        absolute-indexed caches — windowed ring buffers take the engine's
+        scan fallback (``serve.decode.make_prefill_step``)."""
+        assert self.window is None, "windowed caches prefill via decode-scan"
+        b, c, _ = x.shape
+        positions = cache_len[:, None] + jnp.arange(c)[None, :]
+        q, k, v = self.qkv(params, x, positions)
+        smax = cache["k"].shape[1]
+        valid = jnp.arange(c)[None, :] < n_valid[:, None]
+        slot = jnp.where(valid, positions, smax)  # smax = out of bounds
+        bidx = jnp.arange(b)[:, None]
+        k_cache = cache["k"].at[bidx, slot].set(k, mode="drop")
+        v_cache = cache["v"].at[bidx, slot].set(v, mode="drop")
+        kv_pos = jnp.broadcast_to(jnp.arange(smax)[None, :], (b, smax))
+        out = reference_attention(q, k_cache, v_cache, q_pos=positions,
+                                  kv_pos=kv_pos, causal=True,
+                                  logit_softcap=self.logit_softcap)
+        y = forward_matmul(out.reshape(b, c, self.n_heads * self.hd), params["o"]["w"])
         if self.out_bias:
             y = y + params["o"]["b"]
         return y, {"k": k_cache, "v": v_cache}
@@ -397,10 +426,10 @@ class MLAttention(Module):
         """Return (q (B,S,H,qk_dim), c_kv (B,S,r), k_rope (B,S,rope))."""
         b, s, _ = x.shape
         h = self.n_heads
-        ql = x @ params["q_down"]["w"]
+        ql = forward_matmul(x, params["q_down"]["w"])
         ql = rms_normalize(ql) * params["q_norm_scale"]
-        q = (ql @ params["q_up"]["w"]).reshape(b, s, h, self.qk_dim)
-        kv = x @ params["kv_down"]["w"]
+        q = forward_matmul(ql, params["q_up"]["w"]).reshape(b, s, h, self.qk_dim)
+        kv = forward_matmul(x, params["kv_down"]["w"])
         c_kv = rms_normalize(kv[..., : self.kv_lora_rank]) * params["kv_norm_scale"]
         k_rope = kv[..., self.kv_lora_rank:]
         cos, sin = rotary_angles(positions, self.qk_rope_dim, self.rope_theta)
@@ -416,8 +445,8 @@ class MLAttention(Module):
         if positions is None:
             positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
         q, c_kv, k_rope = self._latents(params, x, positions)
-        k_nope = (c_kv @ params["k_up"]["w"]).reshape(b, s, h, self.qk_nope_dim)
-        v = (c_kv @ params["v_up"]["w"]).reshape(b, s, h, self.v_head_dim)
+        k_nope = forward_matmul(c_kv, params["k_up"]["w"]).reshape(b, s, h, self.qk_nope_dim)
+        v = forward_matmul(c_kv, params["v_up"]["w"]).reshape(b, s, h, self.v_head_dim)
         k = jnp.concatenate(
             [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                       (b, s, h, self.qk_rope_dim))], axis=-1)
@@ -432,7 +461,7 @@ class MLAttention(Module):
             out = flash_attention(q, k, v_p, q_pos=positions, kv_pos=positions, causal=True,
                                   scale=scale, q_chunk=q_chunk, k_chunk=k_chunk)
         out = out[..., : self.v_head_dim].reshape(b, s, h * self.v_head_dim)
-        return out @ params["o"]["w"]
+        return forward_matmul(out, params["o"]["w"])
 
     def init_cache(self, batch: int, max_len: int, dtype=None):
         dt = dtype or self.dtype
@@ -464,5 +493,35 @@ class MLAttention(Module):
         out_lat = jnp.einsum("bhqk,bkr->bqhr", w, c_cache.astype(jnp.float32))
         w_uv = params["v_up"]["w"].reshape(self.kv_lora_rank, h, self.v_head_dim)
         out = jnp.einsum("bqhr,rhv->bqhv", out_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
-        y = out.reshape(b, 1, h * self.v_head_dim) @ params["o"]["w"]
+        y = forward_matmul(out.reshape(b, 1, h * self.v_head_dim), params["o"]["w"])
+        return y, {"c_kv": c_cache, "k_rope": r_cache}
+
+    def prefill(self, params, x, cache, cache_len, n_valid):
+        """Chunked absorbed-form prefill: C queries per slot against the
+        latent cache — the decode math with a query axis (see
+        ``Attention.prefill`` for the scatter/validity semantics)."""
+        b, c, _ = x.shape
+        h = self.n_heads
+        positions = cache_len[:, None] + jnp.arange(c)[None, :]
+        q, c_kv_new, k_rope_new = self._latents(params, x, positions)
+        smax = cache["c_kv"].shape[1]
+        valid = jnp.arange(c)[None, :] < n_valid[:, None]
+        slot = jnp.where(valid, positions, smax)
+        bidx = jnp.arange(b)[:, None]
+        c_cache = cache["c_kv"].at[bidx, slot].set(c_kv_new, mode="drop")
+        r_cache = cache["k_rope"].at[bidx, slot].set(k_rope_new, mode="drop")
+        q_nope, q_rope = q[..., : self.qk_nope_dim], q[..., self.qk_nope_dim:]
+        w_uk = params["k_up"]["w"].reshape(self.kv_lora_rank, h, self.qk_nope_dim)
+        q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+        scores = jnp.einsum("bqhr,bkr->bhqk", q_abs, c_cache.astype(jnp.float32))
+        scores += jnp.einsum("bqhp,bkp->bhqk", q_rope.astype(jnp.float32),
+                             r_cache.astype(jnp.float32))
+        scores *= 1.0 / math.sqrt(self.qk_dim)
+        causal = jnp.arange(smax)[None, None, :] <= positions[:, :, None]  # (B,C,S)
+        scores = jnp.where(causal[:, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhqk,bkr->bqhr", w, c_cache.astype(jnp.float32))
+        w_uv = params["v_up"]["w"].reshape(self.kv_lora_rank, h, self.v_head_dim)
+        out = jnp.einsum("bqhr,rhv->bqhv", out_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+        y = forward_matmul(out.reshape(b, c, h * self.v_head_dim), params["o"]["w"])
         return y, {"c_kv": c_cache, "k_rope": r_cache}

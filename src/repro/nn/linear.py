@@ -7,6 +7,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.photonics import forward_matmul
 from repro.nn import activations, initializers
 from repro.nn.module import Module, named_key
 
@@ -32,7 +33,7 @@ class Linear(Module):
         return p
 
     def __call__(self, params, x):
-        y = x @ params["w"]
+        y = forward_matmul(x, params["w"])
         if self.use_bias:
             y = y + params["b"]
         return y
@@ -87,9 +88,9 @@ class GatedMLP(Module):
 
     def __call__(self, params, x):
         g, _ = activations.get(self.activation)
-        gate = g(x @ params["gate"]["w"])
-        up = x @ params["up"]["w"]
-        return (gate * up) @ params["down"]["w"]
+        gate = g(forward_matmul(x, params["gate"]["w"]))
+        up = forward_matmul(x, params["up"]["w"])
+        return forward_matmul(gate * up, params["down"]["w"])
 
 
 @dataclasses.dataclass(frozen=True)

@@ -18,6 +18,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.photonics import forward_matmul
 from repro.nn.linear import Linear
 from repro.nn.module import Module, named_key
 from repro.nn.ssm import causal_conv1d
@@ -75,19 +76,19 @@ class RGLRUBlock(Module):
         }
 
     def _branch(self, params, u):
-        x = u @ params["in_x"]["w"]
+        x = forward_matmul(u, params["in_x"]["w"])
         x = causal_conv1d(x, params["conv_w"], params["conv_b"])
-        r = jax.nn.sigmoid((x @ params["w_a"]["w"]).astype(jnp.float32))
-        i = jax.nn.sigmoid((x @ params["w_i"]["w"]).astype(jnp.float32))
+        r = jax.nn.sigmoid(forward_matmul(x, params["w_a"]["w"]).astype(jnp.float32))
+        i = jax.nn.sigmoid(forward_matmul(x, params["w_i"]["w"]).astype(jnp.float32))
         return x.astype(jnp.float32), r, i
 
     def __call__(self, params, u):
         """u: (B, S, d_model)."""
         x, r, i = self._branch(params, u)
         h = rglru_scan(x, r, i, params)
-        gate = jax.nn.gelu((u @ params["in_gate"]["w"]).astype(jnp.float32))
+        gate = jax.nn.gelu(forward_matmul(u, params["in_gate"]["w"]).astype(jnp.float32))
         y = (h * gate).astype(u.dtype)
-        return y @ params["out"]["w"]
+        return forward_matmul(y, params["out"]["w"])
 
     # ---- decode -----------------------------------------------------------
     def init_cache(self, batch: int, max_len: int = 0, dtype=None):
@@ -100,16 +101,16 @@ class RGLRUBlock(Module):
 
     def decode(self, params, u, cache, cache_len):
         del cache_len
-        x_new = u @ params["in_x"]["w"]  # (B,1,D)
+        x_new = forward_matmul(u, params["in_x"]["w"])  # (B,1,D)
         win = jnp.concatenate([cache["conv"], x_new], axis=1)
         x = (jnp.einsum("bkc,kc->bc", win, params["conv_w"]) + params["conv_b"])[:, None, :]
-        r = jax.nn.sigmoid((x @ params["w_a"]["w"]).astype(jnp.float32))
-        i = jax.nn.sigmoid((x @ params["w_i"]["w"]).astype(jnp.float32))
+        r = jax.nn.sigmoid(forward_matmul(x, params["w_a"]["w"]).astype(jnp.float32))
+        i = jax.nn.sigmoid(forward_matmul(x, params["w_i"]["w"]).astype(jnp.float32))
         xf = x.astype(jnp.float32)
         log_a = _log_a(params, r)
         a = jnp.exp(log_a)[:, 0]
         beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))[:, 0]
         h = a * cache["h"] + beta * (i[:, 0] * xf[:, 0])
-        gate = jax.nn.gelu((u @ params["in_gate"]["w"]).astype(jnp.float32))
-        y = (h[:, None, :] * gate).astype(u.dtype) @ params["out"]["w"]
+        gate = jax.nn.gelu(forward_matmul(u, params["in_gate"]["w"]).astype(jnp.float32))
+        y = forward_matmul((h[:, None, :] * gate).astype(u.dtype), params["out"]["w"])
         return y, {"h": h, "conv": win[:, 1:, :].astype(cache["conv"].dtype)}

@@ -17,6 +17,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.photonics import forward_matmul
 from repro.nn.linear import Linear
 from repro.nn.module import Module, named_key
 
@@ -94,9 +95,10 @@ class Mamba2Block(Module):
     def _project_in(self, params, u):
         """-> (z, xBC_preconv, dt_raw)."""
         if self.split_proj:
-            return (u @ params["in_z"]["w"], u @ params["in_xbc"]["w"],
-                    u @ params["in_dt"]["w"])
-        proj = u @ params["in_proj"]["w"]
+            return (forward_matmul(u, params["in_z"]["w"]),
+                    forward_matmul(u, params["in_xbc"]["w"]),
+                    forward_matmul(u, params["in_dt"]["w"]))
+        proj = forward_matmul(u, params["in_proj"]["w"])
         z, xBC, dt_raw = jnp.split(
             proj, [self.d_inner, self.d_inner + self.conv_dim], axis=-1)
         return z, xBC, dt_raw
@@ -169,7 +171,7 @@ class Mamba2Block(Module):
         y = y * jax.nn.silu(z.astype(jnp.float32))
         var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
         y = y * (var + 1e-6) ** -0.5 * params["norm_scale"].astype(jnp.float32)
-        return (y.astype(u.dtype)) @ params["out_proj"]["w"]
+        return forward_matmul(y.astype(u.dtype), params["out_proj"]["w"])
 
     # ---- decode -----------------------------------------------------------
     def init_cache(self, batch: int, max_len: int = 0, dtype=None):
@@ -208,6 +210,6 @@ class Mamba2Block(Module):
         y = y * jax.nn.silu(z.astype(jnp.float32))
         var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
         y = y * (var + 1e-6) ** -0.5 * params["norm_scale"].astype(jnp.float32)
-        y = y.astype(u.dtype) @ params["out_proj"]["w"]
+        y = forward_matmul(y.astype(u.dtype), params["out_proj"]["w"])
         new_cache = {"ssm": s_new, "conv": win[:, 1:, :].astype(cache["conv"].dtype)}
         return y, new_cache

@@ -1,6 +1,8 @@
 from repro.serve import decode, engine
-from repro.serve.decode import cache_shardings, make_prefill, make_serve_step
-from repro.serve.engine import Engine, Request
+from repro.serve.decode import (cache_shardings, make_prefill, make_prefill_step,
+                                make_serve_step, select_slots)
+from repro.serve.engine import DECODE, DONE, PREFILL, QUEUED, Engine, Request
 
 __all__ = ["decode", "engine", "cache_shardings", "make_prefill",
-           "make_serve_step", "Engine", "Request"]
+           "make_prefill_step", "make_serve_step", "select_slots",
+           "Engine", "Request", "QUEUED", "PREFILL", "DECODE", "DONE"]

@@ -92,3 +92,60 @@ def make_prefill(model):
         return model.head_logits(params, x_final, batch)
 
     return prefill
+
+
+def select_slots(active, new, old):
+    """Per-slot cache select over stacked (L, B, ...) pytrees: slot i takes
+    ``new`` where ``active[i]``, else keeps ``old`` — the mask that stops
+    finished/empty slots from burning state updates in a batched step."""
+
+    def sel(n, o):
+        m = active.reshape((1, -1) + (1,) * (n.ndim - 2))
+        return jnp.where(m, n, o)
+
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def make_prefill_step(model):
+    """Chunked-prefill builder: step(params, tokens (B, C), n_valid (B,),
+    caches, cache_len) -> (last_logits (B, V), new_caches, new_cache_len).
+
+    Fills each slot's KV cache with its next ≤C prompt tokens in ONE
+    batched forward (⌈S/C⌉ forwards for a length-S prompt, not S decode
+    ticks).  ``last_logits[i]`` is the logits after slot i's final valid
+    token — the distribution the first generated token is sampled from
+    when the prompt completes.  Slots with ``n_valid == 0`` are untouched.
+
+    Models exposing ``prefill_step`` (+ ``supports_parallel_prefill``) get
+    the truly parallel path (one scatter + causal attention over the whole
+    cache); recurrent / ring-buffer models fall back to a masked
+    ``lax.scan`` of ``decode_step`` over the chunk — still one jitted
+    forward per chunk, with per-token state advance."""
+    parallel = getattr(model, "supports_parallel_prefill", False)
+    vocab = getattr(model.cfg, "v_padded", None) or model.cfg.vocab_size
+
+    def step(params, tokens, n_valid, caches, cache_len):
+        b, c = tokens.shape
+        if parallel:
+            logits, new_caches = model.prefill_step(
+                params, tokens, caches, cache_len, n_valid)
+            idx = jnp.clip(n_valid - 1, 0, c - 1)
+            last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+            new_caches = select_slots(n_valid > 0, new_caches, caches)
+        else:
+            def body(carry, xs):
+                caches, clen, last = carry
+                t, tok_t = xs
+                valid = t < n_valid
+                logits, upd = model.decode_step(params, tok_t[:, None], caches, clen)
+                caches = select_slots(valid, upd, caches)
+                clen = clen + valid.astype(clen.dtype)
+                last = jnp.where(valid[:, None], logits[:, -1, :].astype(last.dtype), last)
+                return (caches, clen, last), None
+
+            init = (caches, cache_len, jnp.zeros((b, vocab), jnp.float32))
+            (new_caches, _, last), _ = jax.lax.scan(
+                body, init, (jnp.arange(c), tokens.T))
+        return last, new_caches, cache_len + n_valid
+
+    return step

@@ -1,21 +1,42 @@
-"""Batched serving engine: continuous-batching-lite request loop.
+"""Continuous-batching serving engine with a prefill/decode split.
 
-Holds a fixed pool of batch slots with per-slot cache length; requests are
-admitted into free slots, prompts are consumed token-by-token (teacher
-forcing into the cache), then generation proceeds greedily until EOS or
-max_new.  Single jit'd decode_step per tick for the whole batch — the
-serving analogue of the paper's "single operational cycle" claim.
+A fixed pool of ``batch_slots`` KV-cache slots is fed from an admission
+queue.  Each request walks QUEUED → PREFILL → DECODE → DONE:
+
+* **prefill** — the prompt is consumed in chunks of ``prefill_chunk``
+  tokens, each chunk one batched forward that scatters straight into the
+  slot's cache (⌈S/chunk⌉ forwards for a length-S prompt, never S decode
+  ticks).  The logits after the last prompt token yield the first output
+  token, stamping ``first_token_s``.
+* **decode** — one jit'd greedy step per tick across all decoding slots.
+  Finished/empty slots are masked out of the cache update and their
+  emitted token is discarded, so a dead slot costs no state corruption
+  and no stats skew.
+
+Forward projections optionally run through a photonic backend
+(``backend="ref" | "emu" | "pallas"``): every ``forward_matmul`` inside
+the jit'd steps is routed through ``photonics.forward_execution``, so
+inference inherits MRR drift / crosstalk / quantisation when the
+emulated hardware backend is selected.  ``backend=None`` keeps the exact
+digital forward — bit-identical to the seed engine.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.decode import make_serve_step
+from repro.serve.decode import make_prefill_step, make_serve_step, select_slots
+
+QUEUED = "QUEUED"
+PREFILL = "PREFILL"
+DECODE = "DECODE"
+DONE = "DONE"
 
 
 @dataclasses.dataclass
@@ -23,69 +44,264 @@ class Request:
     prompt: list
     max_new: int = 32
     out: list = dataclasses.field(default_factory=list)
-    done: bool = False
+    state: str = QUEUED
+    submit_s: float | None = None
+    first_token_s: float | None = None
+    finish_s: float | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
+
+    @property
+    def ttft_s(self) -> float | None:
+        if self.submit_s is None or self.first_token_s is None:
+            return None
+        return self.first_token_s - self.submit_s
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.submit_s is None or self.finish_s is None:
+            return None
+        return self.finish_s - self.submit_s
+
+
+@contextlib.contextmanager
+def _maybe_drift(hw):
+    if hw is None:
+        yield
+    else:
+        from repro.hardware import drift
+
+        with drift.use_state(hw):
+            yield
 
 
 class Engine:
+    """Continuous-batching engine over ``model.decode_step`` caches.
+
+    Parameters
+    ----------
+    backend : None | "ref" | "emu" | "pallas"
+        ``None`` (or ``"auto"``) keeps the exact digital forward; a named
+        backend routes every forward projection through
+        ``photonics.forward_execution`` with ``photonics`` as the config.
+    photonics : PhotonicConfig | None
+        Required knobs for a photonic backend; defaults to the "digital"
+        preset flipped on.  When the backend emulates stateful hardware
+        and no ``mrr`` model is attached, an ``MRRConfig()`` is attached
+        (mirroring ``api.build_session``).
+    hw_state : drift-state pytree | None
+        In-situ MRR drift/calibration state threaded through the jit'd
+        steps; defaults to pristine state for stateful backends.
+    """
+
     def __init__(self, model, params, *, batch_slots: int = 8, max_len: int = 512,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None, prefill_chunk: int = 16,
+                 backend: str | None = None, photonics=None, hw_state=None,
+                 seed: int = 0):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.eos = eos_id
+        self.prefill_chunk = max(1, int(prefill_chunk))
         self.caches = model.init_caches(batch_slots, max_len)
-        self.cache_len = jnp.zeros((batch_slots,), jnp.int32)
-        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
-        self._step = jax.jit(make_serve_step(model))
+        self._cache_len = np.zeros((batch_slots,), np.int64)
+        self._tokens = np.zeros((batch_slots, 1), np.int32)
         self._requests: list[Request | None] = [None] * batch_slots
+        self._prompt_pos = [0] * batch_slots
         self._pending: list[Request] = []
-        # per-slot queue of forced (prompt) tokens remaining
-        self._forced: list[list] = [[] for _ in range(batch_slots)]
+        self._tick_no = 0
+        self.stats = {"ticks": 0, "prefill_steps": 0, "prefill_tokens": 0,
+                      "decode_steps": 0, "decode_tokens": 0}
+
+        self._photonic = backend not in (None, "auto")
+        self.hw_state = None
+        self._key = None
+        if self._photonic:
+            from repro.core import photonics as ph
+
+            cfg = photonics if photonics is not None else dataclasses.replace(
+                ph.PRESETS["digital"], enabled=True)
+            if not cfg.enabled:
+                cfg = dataclasses.replace(cfg, enabled=True)
+            bk = ph.get_backend(backend)
+            if getattr(bk, "stateful_hardware", False) and cfg.mrr is None:
+                from repro.hardware.mrr import MRRConfig
+
+                cfg = dataclasses.replace(cfg, mrr=MRRConfig())
+            self.photonics = cfg
+            if cfg.mrr is not None and cfg.mrr.stateful:
+                from repro.hardware import drift
+
+                self.hw_state = hw_state if hw_state is not None else drift.init_state(cfg)
+            self._key = jax.random.PRNGKey(seed)
+        else:
+            self.photonics = None
+
+        prefill_step = make_prefill_step(model)
+        serve_step = make_serve_step(model)
+        pcfg, bname = self.photonics, backend
+
+        def prefill_fn(params, tokens, n_valid, caches, cache_len, key, hw):
+            def run():
+                return prefill_step(params, tokens, n_valid, caches, cache_len)
+
+            if not self._photonic:
+                return run()
+            with _maybe_drift(hw):
+                from repro.core.photonics import forward_execution
+
+                with forward_execution(pcfg, bname, key):
+                    return run()
+
+        def decode_fn(params, token, caches, cache_len, active, key, hw):
+            def run():
+                return serve_step(params, token, caches, cache_len)
+
+            if self._photonic:
+                with _maybe_drift(hw):
+                    from repro.core.photonics import forward_execution
+
+                    with forward_execution(pcfg, bname, key):
+                        nxt, logits, upd = run()
+            else:
+                nxt, logits, upd = run()
+            new_caches = select_slots(active, upd, caches)
+            nxt = jnp.where(active[:, None], nxt, token)
+            return nxt, logits[:, -1, :], new_caches
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        # seed-era alias used by older callers/tests
+        self._step = jax.jit(serve_step)
+
+    # ------------------------------------------------------------------ admin
+    @property
+    def cache_len(self):
+        return jnp.asarray(self._cache_len.astype(np.int32))
+
+    @property
+    def tokens(self):
+        return jnp.asarray(self._tokens)
 
     def submit(self, req: Request):
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt: a request must carry >= 1 prompt token")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens does not fit max_len={self.max_len}")
+        if req.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {req.max_new}")
+        req.state = QUEUED
+        req.submit_s = time.monotonic()
         self._pending.append(req)
 
     def _admit(self):
         for i in range(self.slots):
             if self._requests[i] is None and self._pending:
                 req = self._pending.pop(0)
+                req.state = PREFILL
                 self._requests[i] = req
-                self._forced[i] = list(req.prompt[1:])
-                self.tokens = self.tokens.at[i, 0].set(req.prompt[0])
-                self.cache_len = self.cache_len.at[i].set(0)
+                self._prompt_pos[i] = 0
+                self._cache_len[i] = 0
+                self._tokens[i, 0] = 0
                 # reset this slot's cache (zeros are fine: length mask guards)
                 self.caches = jax.tree_util.tree_map(
                     lambda c: c.at[:, i].set(0), self.caches)
 
-    def tick(self):
-        """One synchronous decode step across all active slots."""
-        self._admit()
-        active = [i for i, r in enumerate(self._requests) if r is not None]
-        if not active:
+    def _finish(self, i: int):
+        req = self._requests[i]
+        req.state = DONE
+        req.finish_s = time.monotonic()
+        self._requests[i] = None
+
+    def _next_key(self):
+        if self._key is None:
+            return None
+        self._tick_no += 1
+        return jax.random.fold_in(self._key, self._tick_no)
+
+    # ------------------------------------------------------------------ phases
+    def _prefill_tick(self):
+        slots = [i for i, r in enumerate(self._requests)
+                 if r is not None and r.state == PREFILL]
+        if not slots:
             return False
-        nxt, logits, self.caches = self._step(
-            self.params, self.tokens, self.caches, self.cache_len)
-        del logits
-        nxt = np.asarray(nxt)
-        self.cache_len = self.cache_len + jnp.array(
-            [1 if self._requests[i] is not None else 0 for i in range(self.slots)],
-            jnp.int32)
-        new_tokens = np.asarray(self.tokens).copy()
-        for i in active:
+        c = self.prefill_chunk
+        chunk = np.zeros((self.slots, c), np.int32)
+        n_valid = np.zeros((self.slots,), np.int32)
+        for i in slots:
             req = self._requests[i]
-            if self._forced[i]:
-                new_tokens[i, 0] = self._forced[i].pop(0)  # teacher-force prompt
-                continue
+            pos = self._prompt_pos[i]
+            take = min(c, len(req.prompt) - pos)
+            chunk[i, :take] = req.prompt[pos:pos + take]
+            n_valid[i] = take
+        last, self.caches, _ = self._prefill(
+            self.params, jnp.asarray(chunk), jnp.asarray(n_valid), self.caches,
+            jnp.asarray(self._cache_len.astype(np.int32)),
+            self._next_key(), self.hw_state)
+        self.stats["prefill_steps"] += 1
+        self.stats["prefill_tokens"] += int(n_valid.sum())
+        self._cache_len[slots] += n_valid[slots]
+        completed = [i for i in slots
+                     if self._prompt_pos[i] + int(n_valid[i]) == len(self._requests[i].prompt)]
+        for i in slots:
+            self._prompt_pos[i] += int(n_valid[i])
+        if completed:
+            first = np.asarray(jnp.argmax(last, axis=-1))
+            now = time.monotonic()
+            for i in completed:
+                req = self._requests[i]
+                tok = int(first[i])
+                req.out.append(tok)
+                req.first_token_s = now
+                req.state = DECODE
+                self._tokens[i, 0] = tok
+                if ((self.eos is not None and tok == self.eos)
+                        or len(req.out) >= req.max_new
+                        or self._cache_len[i] >= self.max_len):
+                    self._finish(i)
+        return True
+
+    def _decode_tick(self):
+        slots = [i for i, r in enumerate(self._requests)
+                 if r is not None and r.state == DECODE]
+        if not slots:
+            return False
+        active = np.zeros((self.slots,), bool)
+        active[slots] = True
+        nxt, _, self.caches = self._decode(
+            self.params, jnp.asarray(self._tokens), self.caches,
+            jnp.asarray(self._cache_len.astype(np.int32)), jnp.asarray(active),
+            self._next_key(), self.hw_state)
+        nxt = np.asarray(nxt)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(slots)
+        self._cache_len[slots] += 1
+        for i in slots:
+            req = self._requests[i]
             tok = int(nxt[i, 0])
             req.out.append(tok)
-            new_tokens[i, 0] = tok
-            done = (self.eos is not None and tok == self.eos) or len(req.out) >= req.max_new
-            if done or int(self.cache_len[i]) >= self.max_len - 1:
-                req.done = True
-                self._requests[i] = None
-        self.tokens = jnp.asarray(new_tokens)
+            self._tokens[i, 0] = tok
+            if ((self.eos is not None and tok == self.eos)
+                    or len(req.out) >= req.max_new
+                    or self._cache_len[i] >= self.max_len):
+                self._finish(i)
         return True
+
+    # ------------------------------------------------------------------ loop
+    def tick(self):
+        """One engine step: admit, one chunked-prefill forward over all
+        prefilling slots, one batched decode step over all decoding slots."""
+        self._admit()
+        did_prefill = self._prefill_tick()
+        did_decode = self._decode_tick()
+        if did_prefill or did_decode:
+            self.stats["ticks"] += 1
+            return True
+        return False
 
     def run(self, requests: list[Request], max_ticks: int = 10_000):
         for r in requests:
@@ -95,4 +311,23 @@ class Engine:
             if not self.tick():
                 break
             ticks += 1
+        return requests, ticks
+
+    def run_arrivals(self, requests: list[Request], arrivals, max_ticks: int = 1_000_000):
+        """Serve ``requests`` submitted at wall-clock offsets ``arrivals``
+        (seconds from start, sorted or not).  Returns (requests, ticks)."""
+        order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+        t0 = time.monotonic()
+        idx, ticks = 0, 0
+        while ticks < max_ticks:
+            now = time.monotonic() - t0
+            while idx < len(order) and arrivals[order[idx]] <= now:
+                self.submit(requests[order[idx]])
+                idx += 1
+            if self.tick():
+                ticks += 1
+            elif idx < len(order):
+                time.sleep(min(1e-3, max(0.0, arrivals[order[idx]] - (time.monotonic() - t0))))
+            else:
+                break
         return requests, ticks

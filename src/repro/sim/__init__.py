@@ -11,22 +11,37 @@ fastest one that fits a power budget.
 * ``components`` — per-stage timing/power models from
   ``PhotonicConfig``/``MRRConfig``/``EnergyConfig``
 * ``pipeline``   — replays the emulator's own panel schedule
-  (``hardware.channel.tile_operands``) as per-bus event timelines
+  (``hardware.channel.tile_operands``) as per-bus event timelines;
+  ``forward_workload`` is the serving-side (inference GEMM) counterpart
+  of ``dfa_backward_workload``
+* ``serving``    — request-level timelines (arrivals → queueing →
+  chunked prefill → decode rounds) with p50/p99 TTFT/latency, req/s and
+  J/request per offered load
 * ``autotune``   — searches the schedule space under a power budget
+  (training) or an SLO + power budget (``autotune_serving``)
 
 Entry points: ``api.build_session(schedule="auto")``,
-``launch/train.py --autotune``, ``benchmarks/pipeline_sim.py``.
+``launch/train.py --autotune``, ``launch/serve.py --arrival-rate``,
+``benchmarks/pipeline_sim.py``, ``benchmarks/serving.py``.
 """
 
-from repro.sim.autotune import (DEFAULT_BUS_COUNTS, Candidate, TunedSchedule,
-                                autotune)
+from repro.sim.autotune import (DEFAULT_BUS_COUNTS, DEFAULT_SLOT_COUNTS,
+                                Candidate, ServingCandidate, TunedSchedule,
+                                TunedServing, autotune, autotune_serving)
 from repro.sim.components import STAGES, StageTimes, bank_power_w, stage_times
 from repro.sim.pipeline import (Gemm, PipelineReport, dfa_backward_workload,
-                                panel_schedule, simulate)
+                                forward_workload, panel_schedule, simulate)
+from repro.sim.serving import (RequestSpec, ServiceModel, ServingReport,
+                               poisson_requests, service_model,
+                               simulate_serving)
 
 __all__ = [
-    "DEFAULT_BUS_COUNTS", "Candidate", "TunedSchedule", "autotune",
+    "DEFAULT_BUS_COUNTS", "DEFAULT_SLOT_COUNTS", "Candidate",
+    "ServingCandidate", "TunedSchedule", "TunedServing", "autotune",
+    "autotune_serving",
     "STAGES", "StageTimes", "bank_power_w", "stage_times",
-    "Gemm", "PipelineReport", "dfa_backward_workload", "panel_schedule",
-    "simulate",
+    "Gemm", "PipelineReport", "dfa_backward_workload", "forward_workload",
+    "panel_schedule", "simulate",
+    "RequestSpec", "ServiceModel", "ServingReport", "poisson_requests",
+    "service_model", "simulate_serving",
 ]

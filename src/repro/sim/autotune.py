@@ -17,6 +17,12 @@ the caller's actual workload and returns the fastest schedule whose
 power fits the budget, with every evaluated candidate attached for
 inspection (``TunedSchedule.candidates``).  ``repro.api.build_session``
 exposes it as ``schedule="auto"``; ``launch/train.py`` as ``--autotune``.
+
+``autotune_serving`` is the serving-plane dual: it replays a request
+trace through ``sim.serving.simulate_serving`` for every
+(n_buses, f_s, batch_slots) candidate and returns the *cheapest* one
+holding p99 end-to-end latency under an SLO — power is the objective
+and latency the constraint, where training tuning is the reverse.
 """
 
 from __future__ import annotations
@@ -76,6 +82,119 @@ class TunedSchedule:
 def default_f_s_grid(f_max: float) -> tuple:
     """Symbol-rate candidates: the DAC limit and two halvings of it."""
     return (f_max, f_max / 2.0, f_max / 4.0)
+
+
+DEFAULT_SLOT_COUNTS = (4, 8, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingCandidate:
+    n_buses: int
+    f_s: float
+    batch_slots: int
+    power_w: float
+    feasible: bool  # fits the power budget
+    meets_slo: bool
+    p99_latency_s: float | None  # None when skipped on power
+    requests_per_s: float | None
+    report: object | None  # serving.ServingReport
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedServing:
+    """The cheapest SLO-meeting serving configuration + search record."""
+
+    n_buses: int
+    f_s: float
+    batch_slots: int
+    power_w: float
+    report: object  # serving.ServingReport
+    slo_p99_s: float
+    power_budget_w: float | None
+    candidates: tuple
+
+    def apply(self, pcfg: photonics.PhotonicConfig) -> photonics.PhotonicConfig:
+        """The tuned hardware description (batch_slots is an engine knob,
+        not a device property — pass it to ``Engine``/``Session.engine``)."""
+        return dataclasses.replace(pcfg, n_buses=self.n_buses, f_s=self.f_s)
+
+    def describe(self) -> str:
+        r = self.report
+        return (f"n_buses={self.n_buses} f_s={self.f_s / 1e9:.2f}GHz "
+                f"batch_slots={self.batch_slots} -> "
+                f"p99 {r.latency_p99_s * 1e3:.2f}ms "
+                f"{r.requests_per_s:.1f}req/s {self.power_w:.1f}W "
+                f"{r.j_per_request * 1e3:.2f}mJ/req")
+
+
+def autotune_serving(model, requests, pcfg: photonics.PhotonicConfig, ecfg=None, *,
+                     slo_p99_s: float, power_budget_w: float | None = None,
+                     bus_counts: tuple = DEFAULT_BUS_COUNTS,
+                     f_s_grid: tuple | None = None,
+                     slot_counts: tuple = DEFAULT_SLOT_COUNTS,
+                     prefill_chunk: int = 16) -> TunedServing:
+    """SLO-constrained serving search over (n_buses, f_s, batch_slots).
+
+    Every candidate replays the *same* request trace through
+    ``sim.serving.simulate_serving``; among candidates that fit the power
+    budget AND hold p99 end-to-end latency under ``slo_p99_s``, the
+    cheapest (lowest wall-plug power) wins, ties broken by higher
+    requests/s — the serving dual of ``autotune``'s "fastest under a
+    budget".  Raises ValueError when nothing meets the SLO in budget,
+    naming the closest miss.
+    """
+    from repro.sim import serving
+
+    if f_s_grid is None:
+        f_s_grid = default_f_s_grid(pcfg.f_s)
+    candidates = []
+    best = None
+    closest = None  # least-bad p99 among in-budget candidates
+    for n_buses in sorted(set(bus_counts)):
+        cand_cfg = dataclasses.replace(pcfg, n_buses=n_buses)
+        n_alive = photonics.active_buses(cand_cfg)
+        for f_s in sorted(set(f_s_grid), reverse=True):
+            power = components.bank_power_w(cand_cfg, ecfg, f_s=f_s,
+                                            n_buses=n_alive)
+            in_budget = power_budget_w is None or power <= power_budget_w
+            if not in_budget:
+                for slots in slot_counts:
+                    candidates.append(ServingCandidate(
+                        n_buses, f_s, slots, power, False, False,
+                        None, None, None))
+                continue
+            svc = serving.service_model(model, cand_cfg, ecfg, f_s=f_s)
+            for slots in sorted(set(slot_counts)):
+                report = serving.simulate_serving(
+                    requests, svc, batch_slots=slots,
+                    prefill_chunk=prefill_chunk)
+                meets = report.latency_p99_s <= slo_p99_s
+                cand = ServingCandidate(
+                    n_buses, f_s, slots, power, True, meets,
+                    report.latency_p99_s, report.requests_per_s, report)
+                candidates.append(cand)
+                if closest is None or report.latency_p99_s < closest.p99_latency_s:
+                    closest = cand
+                if meets:
+                    key = (power, -report.requests_per_s, n_buses)
+                    if best is None or key < best[0]:
+                        best = (key, cand)
+    if best is None:
+        if closest is None:
+            min_power = min(c.power_w for c in candidates)
+            raise ValueError(
+                f"no serving candidate fits power_budget_w={power_budget_w:.2f} "
+                f"(cheapest needs {min_power:.2f} W)")
+        raise ValueError(
+            f"no in-budget candidate meets p99 SLO {slo_p99_s * 1e3:.2f} ms "
+            f"(closest: n_buses={closest.n_buses} f_s={closest.f_s / 1e9:.2f}GHz "
+            f"batch_slots={closest.batch_slots} at "
+            f"{closest.p99_latency_s * 1e3:.2f} ms)")
+    _, cand = best
+    return TunedServing(
+        n_buses=cand.n_buses, f_s=cand.f_s, batch_slots=cand.batch_slots,
+        power_w=cand.power_w, report=cand.report, slo_p99_s=slo_p99_s,
+        power_budget_w=power_budget_w, candidates=tuple(candidates))
 
 
 def autotune(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,

@@ -39,6 +39,7 @@ cycles/f_s pricing — tests/test_sim.py holds the cross-check.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +81,33 @@ def dfa_backward_workload(model, t: int) -> list[Gemm]:
     return work
 
 
+def forward_workload(model, t: int) -> list[Gemm]:
+    """The serving unit of work: every weight-stationary forward projection
+    of ``t`` streamed tokens, read from the model's forward GEMM specs —
+    the projections the engine routes through ``photonics.forward_matmul``
+    when serving on a photonic backend."""
+    return [Gemm(name=name, t=t, m=m, k=k)
+            for name, m, k in model.forward_gemm_specs()]
+
+
+@functools.lru_cache(maxsize=4096)
+def _panel_layout(m: int, k: int, pcfg: photonics.PhotonicConfig):
+    """T-independent part of ``panel_schedule`` — memoised: serving sims
+    replay the same per-layer layout at thousands of (candidate, round)
+    points, and ``eval_shape`` retracing would dominate the DES."""
+    from repro.hardware import channel  # lazy: hardware imports photonics
+
+    a = jax.ShapeDtypeStruct((1, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    a_t, b_t = jax.eval_shape(
+        lambda a, b: channel.tile_operands(a, b, pcfg)[:2], a, b)
+    nm, n_alive, _rows, nj, _cols = b_t.shape
+    assert a_t.shape[1:3] == (n_alive, nj)
+    n_panels = photonics.n_contraction_panels(k, pcfg)
+    assert nj == -(-n_panels // n_alive)  # the emulator's own ceiling
+    return nm, n_alive, nj, n_panels
+
+
 def panel_schedule(gemm: Gemm, pcfg: photonics.PhotonicConfig):
     """The GEMM's bus-tiled panel layout, straight from the emulator.
 
@@ -88,17 +116,7 @@ def panel_schedule(gemm: Gemm, pcfg: photonics.PhotonicConfig):
     blocks, alive buses, bus-cycles, and real contraction panels; slot
     (i, j) on alive bus q is real iff j·n_alive + q < n_panels.
     """
-    from repro.hardware import channel  # lazy: hardware imports photonics
-
-    a = jax.ShapeDtypeStruct((1, gemm.k), jnp.float32)
-    b = jax.ShapeDtypeStruct((gemm.m, gemm.k), jnp.float32)
-    a_t, b_t = jax.eval_shape(
-        lambda a, b: channel.tile_operands(a, b, pcfg)[:2], a, b)
-    nm, n_alive, _rows, nj, _cols = b_t.shape
-    assert a_t.shape[1:3] == (n_alive, nj)
-    n_panels = photonics.n_contraction_panels(gemm.k, pcfg)
-    assert nj == -(-n_panels // n_alive)  # the emulator's own ceiling
-    return nm, n_alive, nj, n_panels
+    return _panel_layout(gemm.m, gemm.k, pcfg)
 
 
 @dataclasses.dataclass

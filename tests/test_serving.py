@@ -1,12 +1,27 @@
-"""Serving: decode-vs-forward parity, engine batched generation."""
+"""Serving: decode-vs-forward parity, engine batched generation, chunked
+prefill, photonic-backend inference, request lifecycle."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
-from repro.serve import Engine, Request
+from repro.core import photonics as ph
+from repro.hardware.mrr import MRRConfig
+from repro.serve import DONE, Engine, Request
 from repro.serve.decode import make_prefill, make_serve_step
+
+
+def _serve(model, params, prompt, max_new=5, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 48)
+    eng = Engine(model, params, **kw)
+    reqs = [Request(prompt=list(prompt), max_new=max_new)]
+    eng.run(reqs)
+    return reqs[0], eng
 
 
 def test_decode_matches_forward_logits():
@@ -60,3 +75,162 @@ def test_serve_step_builder():
     nxt, logits, caches2 = step(params, tok, caches, jnp.zeros((2,), jnp.int32))
     assert nxt.shape == (2, 1) and nxt.dtype == jnp.int32
     assert logits.shape[-1] == 128
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+def test_prefill_tick_counts():
+    """A length-S prompt fills in ceil(S/chunk) batched forwards; the first
+    token falls out of the final prefill forward, so decode runs N-1 steps."""
+    model = configs.get("qwen1.5-0.5b").make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    s, chunk, n = 9, 4, 5
+    prompt = [(7 * i + 3) % 100 for i in range(s)]
+    req, eng = _serve(model, params, prompt, max_new=n, prefill_chunk=chunk)
+    assert req.done and len(req.out) == n
+    assert eng.stats["prefill_steps"] == -(-s // chunk) == 3
+    assert eng.stats["prefill_tokens"] == s
+    assert eng.stats["decode_steps"] == n - 1
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-130m"])
+def test_prefill_chunk_parity(arch):
+    """Chunked prefill is numerically the same computation as token-by-token
+    cache filling: greedy outputs match across chunk sizes (the parallel
+    scatter path for attention models, the masked decode-scan for SSMs)."""
+    model = configs.get(arch).make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = [(5 * i + 2) % 64 for i in range(7)]
+    outs = [
+        _serve(model, params, prompt, prefill_chunk=c)[0].out for c in (4, 1)
+    ]
+    assert outs[0] == outs[1]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["minicpm3-4b", "recurrentgemma-9b"])
+def test_prefill_chunk_parity_slow_archs(arch):
+    """MLA absorbed-form prefill and the windowed ring-buffer scan fallback."""
+    model = configs.get(arch).make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = [(5 * i + 2) % 64 for i in range(7)]
+    outs = [
+        _serve(model, params, prompt, prefill_chunk=c)[0].out for c in (3, 1)
+    ]
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle / scheduler regressions
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_bad_requests():
+    model = configs.get("qwen1.5-0.5b").make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, batch_slots=2, max_len=16)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(prompt=[], max_new=4))
+    with pytest.raises(ValueError, match="does not fit"):
+        eng.submit(Request(prompt=list(range(16)), max_new=4))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(prompt=[1], max_new=0))
+
+
+def test_dead_slots_cost_no_decode_work():
+    """Once a request finishes, its slot stops contributing decode steps:
+    serving a short and a long request together costs exactly as many
+    decode forwards as the long request alone (finished slots are masked,
+    not fed stale tokens)."""
+    model = configs.get("qwen1.5-0.5b").make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    long_alone, eng_alone = _serve(model, params, [3, 5], max_new=10)
+    eng = Engine(model, params, batch_slots=2, max_len=48)
+    short = Request(prompt=[7, 11], max_new=2)
+    long = Request(prompt=[3, 5], max_new=10)
+    eng.run([short, long])
+    assert short.done and long.done
+    assert len(short.out) == 2 and len(long.out) == 10
+    # the shared pool runs the same number of decode forwards as the long
+    # request alone — the dead slot adds zero ticks
+    assert eng.stats["decode_steps"] == eng_alone.stats["decode_steps"]
+    # and masking preserves the long request's tokens exactly
+    assert long.out == long_alone.out
+
+
+def test_finish_at_max_len_is_single_transition():
+    """A request that hits the cache ceiling finishes exactly once, with
+    output truncated to what fit (the seed engine double-marked here)."""
+    model = configs.get("qwen1.5-0.5b").make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    req, eng = _serve(model, params, [3, 5], max_new=50, max_len=8,
+                      prefill_chunk=4)
+    assert req.state == DONE and req.done
+    # prompt fills 2 positions; decode writes until cache_len == max_len:
+    # first token from prefill + 6 decode tokens
+    assert len(req.out) == 1 + (8 - 2)
+    assert eng.stats["decode_steps"] == 6
+
+
+def test_request_timestamps_ordered():
+    model = configs.get("qwen1.5-0.5b").make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    req, _ = _serve(model, params, [2, 4, 6], max_new=4)
+    assert req.submit_s <= req.first_token_s <= req.finish_s
+    assert req.ttft_s >= 0 and req.latency_s >= req.ttft_s
+
+
+# ---------------------------------------------------------------------------
+# photonic backends
+# ---------------------------------------------------------------------------
+
+def _emu_ideal_cfg():
+    return dataclasses.replace(ph.PRESETS["emu_ideal"], mrr=MRRConfig.ideal())
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-130m"])
+def test_emu_ideal_serving_matches_digital(arch):
+    """Greedy serving through the ideal emulated MRR bank (and the ref
+    photonic backend) is token-for-token identical to the digital engine —
+    the serving analogue of the backend-equivalence tests."""
+    model = configs.get(arch).make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = [(7 * i + 3) % 64 for i in range(6)]
+    digital = _serve(model, params, prompt, prefill_chunk=4)[0].out
+    cfg = _emu_ideal_cfg()
+    for backend in ("emu", "ref"):
+        out = _serve(model, params, prompt, prefill_chunk=4,
+                     backend=backend, photonics=cfg)[0].out
+        assert out == digital, backend
+
+
+def test_drifted_emu_serving_terminates_finite():
+    """A drifting device (nonzero residual detuning) still serves to
+    completion with real token ids — inference inherits the hardware
+    imperfection without NaN/Inf fallout."""
+    from repro.hardware import drift
+
+    model = configs.get("qwen1.5-0.5b").make_smoke()
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = dataclasses.replace(ph.PRESETS["emu_onchip"], mrr=MRRConfig())
+    state = drift.init_state(cfg)
+    state["drift"] = 0.2 * jax.random.normal(jax.random.PRNGKey(7),
+                                             state["drift"].shape)
+    req, eng = _serve(model, params, [3, 5, 7], max_new=6, backend="emu",
+                      photonics=cfg, hw_state=state, seed=3)
+    assert req.done and len(req.out) == 6
+    vocab = model.cfg.vocab_size
+    assert all(0 <= t < vocab for t in req.out)
+
+
+def test_session_engine_round_trip():
+    """api.build_session -> Session.engine serves on the session's cell."""
+    from repro import api
+
+    session = api.build_session(arch="qwen1.5-0.5b", algo="bp",
+                                hardware="digital", smoke=True)
+    eng = session.engine(batch_slots=2, max_len=32, prefill_chunk=4)
+    reqs = [Request(prompt=[1, 2, 3], max_new=4) for _ in range(3)]
+    done, _ticks = eng.run(reqs)
+    assert all(r.done and len(r.out) == 4 for r in done)

@@ -1,0 +1,213 @@
+"""repro.sim.serving: service-model exactness, queueing behaviour under
+load, the SLO-constrained serving autotuner, and the BENCH_serving
+schema round-trip."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api, sim
+from repro.core import photonics
+
+
+def _mlp_model():
+    return api.build_model("mnist_mlp")  # shape-only; tiny forward workload
+
+
+def _svc(n_buses=1, f_s=None):
+    pcfg = photonics.PhotonicConfig(n_buses=n_buses)
+    return sim.service_model(_mlp_model(), pcfg, f_s=f_s)
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+def test_forward_workload_mlp():
+    work = sim.forward_workload(_mlp_model(), t=3)
+    assert [g.name for g in work] == ["h0", "h1", "head"]
+    assert [(g.m, g.k) for g in work] == [(800, 784), (800, 800), (10, 800)]
+    assert all(g.t == 3 for g in work)
+
+
+def test_forward_workload_transformer():
+    model = api.build_model("qwen1.5-0.5b")
+    work = sim.forward_workload(model, t=1)
+    # 24 layers x 7 projections (q,k,v,o,gate,up,down) + unembed
+    assert len(work) == 24 * 7 + 1
+    assert work[-1].name == "head.unembed"
+    assert work[-1].k == model.cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# service model
+# ---------------------------------------------------------------------------
+
+def test_service_model_affine_is_exact():
+    """wall(T) = a*T + b is an identity of the panel timeline, not a fit:
+    the 2-point model reproduces the full simulator at any T."""
+    svc = _svc()
+    pcfg = photonics.PhotonicConfig()
+    for t in (3, 7, 33):
+        full = sim.simulate(sim.forward_workload(_mlp_model(), t), pcfg,
+                            include_weight_update=False).wall_clock_s
+        assert full == pytest.approx(svc.round_s(t), rel=1e-12)
+    assert svc.round_s(0) == 0.0
+
+
+def test_service_model_scales_with_buses():
+    """More buses shorten the round (the per-token slope drops)."""
+    a1, a4 = _svc(1).a, _svc(4).a
+    assert a4 < a1
+
+
+# ---------------------------------------------------------------------------
+# request-level DES
+# ---------------------------------------------------------------------------
+
+def test_poisson_requests_statistics():
+    reqs = sim.poisson_requests(100.0, 2000, prompt_len=8, decode_len=4,
+                                seed=0)
+    arr = np.array([r.arrival_s for r in reqs])
+    assert len(reqs) == 2000 and np.all(np.diff(arr) >= 0)
+    gaps = np.diff(np.concatenate([[0.0], arr]))
+    assert np.mean(gaps) == pytest.approx(1e-2, rel=0.1)
+    with pytest.raises(ValueError):
+        sim.poisson_requests(0.0, 4)
+
+
+def test_latency_monotone_in_offered_load():
+    """Queueing: p99 end-to-end latency grows with the offered rate."""
+    svc = _svc()
+    cap = 1.0 / svc.round_s(1)
+    p99 = []
+    for frac in (0.05, 0.5, 5.0):
+        reqs = sim.poisson_requests(frac * cap, 200, prompt_len=16,
+                                    decode_len=8, seed=3)
+        rep = sim.simulate_serving(reqs, svc, batch_slots=4, prefill_chunk=8)
+        p99.append(rep.latency_p99_s)
+        assert rep.ttft_p50_s <= rep.latency_p50_s
+        assert rep.n_requests == 200 and rep.j_per_request > 0
+    assert p99[0] < p99[1] < p99[2]
+
+
+def test_serving_round_accounting():
+    """One request, prompt S, chunk C: ceil(S/C) prefill rounds and
+    decode_len - 1 decode rounds — mirroring the engine's tick counts."""
+    svc = _svc()
+    reqs = [sim.RequestSpec(arrival_s=0.0, prompt_len=9, decode_len=5)]
+    rep = sim.simulate_serving(reqs, svc, batch_slots=4, prefill_chunk=4)
+    assert rep.prefill_tokens == 9
+    assert rep.decode_tokens == 4  # first token rides the prefill forward
+    assert rep.rounds == 3 + 4
+    # makespan is the sum of the round durations (single request, no idle)
+    expect = (svc.round_s(4) * 2 + svc.round_s(1)) + 4 * svc.round_s(1)
+    assert rep.makespan_s == pytest.approx(expect, rel=1e-12)
+
+
+def test_serving_report_metrics_finite():
+    svc = _svc()
+    reqs = sim.poisson_requests(50.0, 64, prompt_len=8, decode_len=4, seed=1)
+    rep = sim.simulate_serving(reqs, svc, batch_slots=8)
+    m = rep.as_metrics("s_")
+    assert all(np.isfinite(v) for v in m.values())
+    assert m["s_requests_per_s"] > 0 and 0 < m["s_utilisation"] <= 1
+
+
+# ---------------------------------------------------------------------------
+# SLO autotuner
+# ---------------------------------------------------------------------------
+
+def test_autotune_serving_meets_slo_in_budget():
+    model = _mlp_model()
+    pcfg = photonics.PhotonicConfig()
+    svc1 = sim.service_model(model, pcfg)
+    cap = 1.0 / svc1.round_s(1)
+    reqs = sim.poisson_requests(2.0 * cap, 64, prompt_len=16, decode_len=8,
+                                seed=5)
+    # SLO at half of what the overloaded single-bus default achieves
+    default = sim.simulate_serving(reqs, svc1, batch_slots=8)
+    budget = sim.bank_power_w(pcfg, n_buses=4)
+    tuned = sim.autotune_serving(model, reqs, pcfg,
+                                 slo_p99_s=0.5 * default.latency_p99_s,
+                                 power_budget_w=budget,
+                                 bus_counts=(1, 2, 4))
+    assert tuned.report.latency_p99_s <= tuned.slo_p99_s
+    assert tuned.power_w <= budget
+    assert tuned.report.requests_per_s > default.requests_per_s
+    # every in-budget candidate was actually simulated
+    assert any(c.feasible and not c.meets_slo for c in tuned.candidates) or \
+        all(c.meets_slo for c in tuned.candidates if c.feasible)
+    # the tuned (n_buses, f_s) maps back onto hardware
+    applied = tuned.apply(pcfg)
+    assert applied.n_buses == tuned.n_buses and applied.f_s == tuned.f_s
+    assert "p99" in tuned.describe()
+
+
+def test_autotune_serving_raises_when_slo_unmeetable():
+    model = _mlp_model()
+    pcfg = photonics.PhotonicConfig()
+    reqs = sim.poisson_requests(10.0, 16, prompt_len=16, decode_len=8, seed=2)
+    with pytest.raises(ValueError, match="meets p99 SLO"):
+        sim.autotune_serving(model, reqs, pcfg, slo_p99_s=1e-15,
+                             bus_counts=(1, 2))
+
+
+def test_autotune_serving_raises_when_budget_too_tight():
+    model = _mlp_model()
+    pcfg = photonics.PhotonicConfig()
+    reqs = sim.poisson_requests(10.0, 16, prompt_len=16, decode_len=8, seed=2)
+    with pytest.raises(ValueError, match="power_budget_w"):
+        sim.autotune_serving(model, reqs, pcfg, slo_p99_s=10.0,
+                             power_budget_w=1e-3, bus_counts=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# BENCH_serving schema round-trip
+# ---------------------------------------------------------------------------
+
+def test_bench_serving_round_trip(tmp_path):
+    from benchmarks import serving as bench_serving
+    from repro.bench import load_bench
+
+    results = {
+        "arch": "mnist_mlp", "capacity_req_per_s": 100.0,
+        "sweep": [{
+            "load_fraction": f, "offered_rate": f * 100, "requests_per_s": 90.0,
+            "ttft_p50_ms": 1.0, "ttft_p99_ms": 2.0, "latency_p50_ms": 3.0,
+            "latency_p99_ms": 4.0, "utilisation": 0.5, "power_w": 20.0,
+            "j_per_request": 0.1} for f in (0.3, 0.6, 0.9)],
+        "autotune": {
+            "n_buses": 2, "f_s_ghz": 10.0, "batch_slots": 8, "power_w": 40.0,
+            "power_budget_w": 80.0, "slo_p99_ms": 50.0, "p99_latency_ms": 20.0,
+            "slo_margin_ms": 30.0, "requests_per_s": 200.0,
+            "default_requests_per_s": 100.0, "default_p99_latency_ms": 100.0,
+            "speedup_vs_default": 2.0, "j_per_request": 0.05},
+    }
+    path = bench_serving.write_report(results, str(tmp_path))
+    r = load_bench(path)
+    m = r["metrics"]
+    for frac in (30, 60, 90):
+        assert f"load{frac:02d}_latency_p99_ms" in m
+        assert f"load{frac:02d}_requests_per_s" in m
+        assert f"load{frac:02d}_j_per_request" in m
+    assert m["auto_slo_margin_ms"] == 30.0
+    assert m["auto_speedup_vs_default"] == 2.0
+
+
+@pytest.mark.slow
+def test_bench_serving_runs_real():
+    """The full benchmark (real qwen workload) holds its acceptance shape:
+    3 load rows + an autotune row that meets its SLO within budget and
+    beats the default single-bus configuration on requests/s."""
+    from benchmarks import serving as bench_serving
+
+    results = bench_serving.run(n=48)
+    assert len(results["sweep"]) == 3
+    a = results["autotune"]
+    assert a["slo_margin_ms"] >= 0
+    assert a["power_w"] <= a["power_budget_w"]
+    assert a["speedup_vs_default"] > 1.0
