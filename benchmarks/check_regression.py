@@ -1,0 +1,181 @@
+"""Perf-regression gate over the BENCH_*.json trajectory.
+
+Compares a fresh bench run (``--fresh``, e.g. CI's ``bench-out/``) against
+the committed baselines in ``benchmarks/baselines/`` and exits nonzero when
+any *gated* metric regresses past its tolerance.  Only the metrics named in
+``GATES`` are gated — accuracy-style metrics have their own test-suite
+checks, and ungated telemetry may move freely.
+
+Two tolerance classes, because two kinds of metric live in the trajectory:
+
+* **machine-independent** metrics (simulated wall-clock, cycle-count
+  speedups, the fused/unfused ratio) are deterministic given the code, so
+  they gate at the default −15 %;
+* **absolute wall-clock** metrics (steps/s, MACs/s, p99 latency) vary with
+  the host — shared CI runners jitter by tens of percent — so they carry an
+  explicit looser tolerance in the registry.  They still catch the
+  order-of-magnitude cliffs this gate exists for (e.g. a kernel silently
+  falling back to an unfused or interpreted path).
+
+Re-baselining (after an intentional perf change or a runner upgrade)::
+
+    python benchmarks/run.py --smoke --bench --bench-dir bench-out
+    python benchmarks/check_regression.py --fresh bench-out --update
+    git add benchmarks/baselines && git commit
+
+CI wiring: ``.github/workflows/ci.yml`` runs this right after the BENCH
+schema validation; a baseline file that doesn't exist yet is reported and
+skipped, so adding a new bench never turns CI red before its first
+re-baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+
+DEFAULT_TOLERANCE = 0.15
+
+# bench name -> {metric: direction | (direction, tolerance)}.
+# direction "higher" gates fresh < baseline·(1−tol);
+# direction "lower"  gates fresh > baseline·(1+tol).
+_WALL = 0.60  # absolute wall-clock metrics: CI-runner jitter class
+GATES: dict[str, dict[str, tuple[str, float] | str]] = {
+    "train_throughput": {
+        "steps_per_s": ("higher", _WALL),
+        "macs_per_s": ("higher", _WALL),
+        "p90_step_s": ("lower", _WALL),
+    },
+    "emu_kernel": {
+        # the fusion ratio is the headline: both sides run on the same
+        # host, so it gates tight even on noisy runners
+        "fused_speedup": "higher",
+        "fused_steps_per_s": ("higher", _WALL),
+        "fused_macs_per_s": ("higher", _WALL),
+        "fused_p99_ms": ("lower", _WALL),
+    },
+    "bus_scaling": {
+        # simulated cycle counts — deterministic
+        "cycle_speedup": "higher",
+    },
+    "pipeline": {
+        # repro.sim timelines — deterministic
+        "qwen1_5_0_5b_auto_wall_us": ("lower", DEFAULT_TOLERANCE),
+        "qwen1_5_0_5b_auto_speedup_vs_b1": "higher",
+    },
+    "serving": {
+        "capacity_req_per_s": ("higher", _WALL),
+        "auto_requests_per_s": ("higher", _WALL),
+        "auto_p99_latency_ms": ("lower", _WALL),
+    },
+}
+
+
+def _repo_paths():
+    here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, os.path.join(os.path.dirname(here), "src"))
+    return os.path.join(here, "baselines")
+
+
+def _gate_spec(spec, default_tol: float) -> tuple[str, float]:
+    if isinstance(spec, str):
+        return spec, default_tol
+    return spec
+
+
+def check_bench(name: str, fresh: dict, base: dict,
+                default_tol: float) -> tuple[list[str], list[str]]:
+    """-> (regressions, report_lines) for one bench's gated metrics."""
+    regressions, lines = [], []
+    for metric, spec in GATES[name].items():
+        direction, tol = _gate_spec(spec, default_tol)
+        if metric not in base:
+            lines.append(f"  {metric}: not in baseline — skipped")
+            continue
+        if metric not in fresh:
+            regressions.append(f"{name}.{metric}: missing from fresh run")
+            continue
+        b, f = base[metric], fresh[metric]
+        if b == 0:
+            lines.append(f"  {metric}: zero baseline — skipped")
+            continue
+        delta = (f - b) / abs(b)
+        bad = (delta < -tol) if direction == "higher" else (delta > tol)
+        verdict = "REGRESSION" if bad else "ok"
+        lines.append(f"  {metric}: baseline {b:.6g} -> fresh {f:.6g} "
+                     f"({delta:+.1%}, want {direction}, tol {tol:.0%}) "
+                     f"{verdict}")
+        if bad:
+            regressions.append(
+                f"{name}.{metric}: {b:.6g} -> {f:.6g} ({delta:+.1%} "
+                f"exceeds {tol:.0%} {direction}-is-better tolerance)")
+    return regressions, lines
+
+
+def main(argv=None) -> int:
+    baselines_default = _repo_paths()
+    from repro.bench import load_bench
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="bench-out",
+                    help="directory with the fresh BENCH_*.json run")
+    ap.add_argument("--baselines", default=baselines_default,
+                    help="directory with the committed baselines")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="default relative tolerance for gated metrics")
+    ap.add_argument("--update", action="store_true",
+                    help="re-baseline: copy the fresh gated benches over "
+                         "the committed baselines instead of checking")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        os.makedirs(args.baselines, exist_ok=True)
+        for name in sorted(GATES):
+            src = os.path.join(args.fresh, f"BENCH_{name}.json")
+            if not os.path.exists(src):
+                print(f"[update] {name}: no fresh BENCH_{name}.json — "
+                      f"skipped")
+                continue
+            load_bench(src)  # refuse to baseline an invalid report
+            shutil.copy(src, os.path.join(args.baselines,
+                                          f"BENCH_{name}.json"))
+            print(f"[update] {name}: re-baselined from {src}")
+        return 0
+
+    regressions = []
+    for name in sorted(GATES):
+        base_path = os.path.join(args.baselines, f"BENCH_{name}.json")
+        fresh_path = os.path.join(args.fresh, f"BENCH_{name}.json")
+        if not os.path.exists(base_path):
+            print(f"{name}: no committed baseline — skipped "
+                  f"(run --update to create one)")
+            continue
+        if not os.path.exists(fresh_path):
+            regressions.append(f"{name}: baseline exists but the fresh run "
+                               f"produced no BENCH_{name}.json")
+            print(f"{name}: MISSING from fresh run")
+            continue
+        base = load_bench(base_path)["metrics"]
+        fresh = load_bench(fresh_path)["metrics"]
+        bad, lines = check_bench(name, fresh, base, args.tolerance)
+        print(f"{name}:")
+        for ln in lines:
+            print(ln)
+        regressions.extend(bad)
+
+    if regressions:
+        print(f"\n{len(regressions)} perf regression(s):", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        print("\nIf intentional, re-baseline with:\n"
+              "  python benchmarks/check_regression.py "
+              "--fresh <dir> --update", file=sys.stderr)
+        return 1
+    print("\nno perf regressions in gated metrics")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

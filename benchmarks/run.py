@@ -13,6 +13,7 @@ its paper anchor).  Individual modules offer richer CLIs:
   python -m benchmarks.roofline           (deliverable g; --bench auto-
                                            generates results/dryrun.json)
   python -m benchmarks.pipeline_sim       (repro.sim timing study)
+  python -m benchmarks.emu_kernel         (fused emu-kernel speedup)
 
 ``--smoke`` instead runs one ``repro.api.build_session(...).fit`` step for
 EVERY algorithm registered in ``repro.algos`` (mnist_mlp smoke arch) — the
@@ -33,9 +34,13 @@ the roofline + photonic-backward parity numbers (auto-generating the
 dry-run record when missing) as ``BENCH_roofline.json``, and the
 request-level serving study (``benchmarks.serving``: p50/p99 TTFT and
 latency, requests/s and J/request vs offered load + the SLO-constrained
-serving autotuner) as ``BENCH_serving.json``; combined with ``--smoke``
-it also writes ``BENCH_smoke.json``.  CI archives the ``BENCH_*.json``
-files — they are the repo's perf trajectory.
+serving autotuner) as ``BENCH_serving.json``, and the fused emu-kernel
+study (``benchmarks.emu_kernel``: fused vs unfused steps/s and MACs/s
+plus the measured-feedback schedule co-tuning) as
+``BENCH_emu_kernel.json``; combined with ``--smoke`` it also writes
+``BENCH_smoke.json``.  CI archives the ``BENCH_*.json`` files — they are
+the repo's perf trajectory, and ``benchmarks/check_regression.py`` gates
+changes against the committed ``benchmarks/baselines/``.
 """
 
 from __future__ import annotations
@@ -340,6 +345,31 @@ def bench_serving(out_dir: str = ".") -> str:
     return path
 
 
+def bench_emu_kernel(out_dir: str = ".", steps: int = 3) -> str:
+    """Run the fused emu-kernel study (ref vs fused-xla step time on the
+    qwen1.5-0.5b-shaped DFA backward + the measured-feedback schedule
+    co-tuning) and write BENCH_emu_kernel.json."""
+    ekb = _sibling("emu_kernel")
+
+    path = ekb.write_report(ekb.run(steps=steps, warmup=1), out_dir)
+    print(f"[bench] wrote {path}", flush=True)
+    return path
+
+
+def _dryrun_path(out_dir: str = ".") -> str:
+    """Where the roofline's dry-run record lives: the env override, an
+    existing local ``results/dryrun.json``, else INSIDE the bench dir —
+    auto-generation must not scatter side-outputs relative to the CWD
+    when the caller asked for everything under ``--bench-dir``."""
+    override = os.environ.get("REPRO_DRYRUN_JSON")
+    if override:
+        return override
+    legacy = os.path.join("results", "dryrun.json")
+    if os.path.exists(legacy):
+        return legacy
+    return os.path.join(out_dir, "dryrun.json")
+
+
 def _ensure_dryrun(path: str, arch: str = "qwen1.5-0.5b") -> str:
     """Auto-generate the dry-run record the roofline needs (one train cell
     on the single-pod mesh, ~10 s) when none exists yet.  Runs in a
@@ -350,6 +380,7 @@ def _ensure_dryrun(path: str, arch: str = "qwen1.5-0.5b") -> str:
 
     if os.path.exists(path):
         return path
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in ("src", env.get("PYTHONPATH", "")) if p)
@@ -369,8 +400,7 @@ def bench_roofline(out_dir: str = ".") -> str:
     dpl = _sibling("dfa_pipeline_latency")
     from repro.bench import write_bench
 
-    path = _ensure_dryrun(
-        os.environ.get("REPRO_DRYRUN_JSON", "results/dryrun.json"))
+    path = _ensure_dryrun(_dryrun_path(out_dir))
     rows = rl.roofline_rows(path, "single")
     sim_rows = dpl.sim_rows(path, "single")
     metrics = {}
@@ -423,6 +453,7 @@ def main() -> None:
         bench_pipeline(out_dir=args.bench_dir)
         bench_roofline(out_dir=args.bench_dir)
         bench_serving(out_dir=args.bench_dir)
+        bench_emu_kernel(out_dir=args.bench_dir)
         return
     print("name,us_per_call,derived")
     for name, fn in TABLES:

@@ -158,7 +158,8 @@ class Session:
 
 
 def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
-                  backend="auto", optimizer=None, seed: int = 0,
+                  backend="auto", emu_kernel: str | None = None,
+                  optimizer=None, seed: int = 0,
                   smoke: bool = False, dtype=jnp.float32,
                   error_compress: str = "none", freeze_norms: bool = False,
                   feedback: fb_lib.FeedbackConfig | None = None,
@@ -168,7 +169,8 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
                   schedule_batch: int | None = None,
                   microbatches: int = 1,
                   data_parallel: bool | str = "auto", prefetch: int = 2,
-                  recalibrate_every: int | None = None,
+                  digital_step_s: float | None = None,
+                  recalibrate_every: int | str | None = None,
                   ckpt_dir: str | None = None,
                   ckpt_every: int = 500, log_every: int = 50,
                   log_path: str | None = None,
@@ -177,10 +179,30 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
     model = build_model(arch, smoke=smoke, dtype=dtype)
     algorithm = algos.get(algo)             # fail fast on unknown names
     backend_obj = photonics.get_backend(backend)  # (likewise for the backend)
+    if emu_kernel is not None:
+        # emu execution-path override ("ref" | "pallas" | "xla"): rebuild
+        # the backend instance so the whole session (train + recalibrate)
+        # runs the requested kernel.  Only meaningful on the emu backend.
+        if not isinstance(backend_obj, photonics.EmulatedMRRBackend):
+            raise ValueError(
+                f"emu_kernel={emu_kernel!r} requires backend='emu', "
+                f"got {backend_obj.name!r}")
+        from repro.hardware.channel import resolve_emu_kernel
+
+        resolve_emu_kernel(emu_kernel)      # fail fast on unknown specs
+        backend_obj = dataclasses.replace(backend_obj, emu_kernel=emu_kernel)
+        backend = backend_obj
     hw_cfg = resolve_hardware(hardware)
     if n_buses is not None:
         # multi-wavelength scale-out: override the preset's bus count
         hw_cfg = dataclasses.replace(hw_cfg, n_buses=n_buses)
+    if backend_obj.stateful_hardware and hw_cfg.mrr is None:
+        # device-level backend with an abstract hardware preset: attach the
+        # default device description (drift ON) so the emulation has a bank
+        # (before the schedule search so the autotuner sees the device too)
+        from repro.hardware.mrr import MRRConfig
+
+        hw_cfg = dataclasses.replace(hw_cfg, mrr=MRRConfig())
     tuned = None
     if schedule == "auto":
         # repro.sim schedule autotuning: search (n_buses, tiling, f_s) on
@@ -194,27 +216,38 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
         workload = sim.dfa_backward_workload(model, t=schedule_batch or 64)
         bus_counts = ((n_buses,) if n_buses is not None
                       else sim.DEFAULT_BUS_COUNTS)
+        recal_candidates = (0,)
+        drift_budget = None
+        if recalibrate_every == "auto":
+            # co-optimise the recalibration cadence: the heater sweep's
+            # amortised sim-time cost trades against drift accuracy, held
+            # under a budget of half the stationary drift (the regime
+            # where BENCH_hardware's recovery curves keep DFA training)
+            device = hw_cfg.mrr
+            recal_candidates = sim.DEFAULT_RECAL_CANDIDATES
+            if device is not None and device.drift_sigma > 0:
+                drift_budget = 0.5 * device.drift_sigma
         # search only "panel" tilings: that is the layout the emulator
         # actually executes, so the applied (n_buses, f_s) is optimal for
         # the schedule the session will really run ("layer" projections
         # stay available through sim.autotune directly)
         tuned = sim.autotune(workload, hw_cfg,
                              power_budget_w=power_budget_w,
-                             bus_counts=bus_counts, tilings=("panel",))
+                             bus_counts=bus_counts, tilings=("panel",),
+                             digital_s=digital_step_s or 0.0,
+                             recal_candidates=recal_candidates,
+                             drift_budget=drift_budget)
         hw_cfg = tuned.apply(hw_cfg)
+        if recalibrate_every == "auto":
+            recalibrate_every = tuned.recalibrate_every
     elif schedule is not None:
         raise ValueError(f"unknown schedule {schedule!r} (None | 'auto')")
-    elif power_budget_w is not None or schedule_batch is not None:
+    elif (power_budget_w is not None or schedule_batch is not None
+          or digital_step_s is not None or recalibrate_every == "auto"):
         # these only steer the autotuner — accepting them without
         # schedule="auto" would silently enforce nothing
-        raise ValueError(
-            "power_budget_w/schedule_batch require schedule='auto'")
-    if backend_obj.stateful_hardware and hw_cfg.mrr is None:
-        # device-level backend with an abstract hardware preset: attach the
-        # default device description (drift ON) so the emulation has a bank
-        from repro.hardware.mrr import MRRConfig
-
-        hw_cfg = dataclasses.replace(hw_cfg, mrr=MRRConfig())
+        raise ValueError("power_budget_w/schedule_batch/digital_step_s/"
+                         "recalibrate_every='auto' require schedule='auto'")
     if recalibrate_every is None:
         # default cadence: in-situ recalibration on for any drifting device
         drifting = (backend_obj.stateful_hardware and hw_cfg.mrr is not None

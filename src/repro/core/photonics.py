@@ -289,15 +289,23 @@ class EmulatedMRRBackend(PhotonicBackend):
     ring transfer, heater inscription + DAC, thermal crosstalk, BPD
     shot/read noise, per-pass ADC — and, under the Trainer, stateful
     resonance drift with in-situ recalibration.  ``cfg.mrr`` describes the
-    device (None falls back to ``MRRConfig()`` defaults)."""
+    device (None falls back to ``MRRConfig()`` defaults).
+
+    ``emu_kernel`` picks the execution path ("auto" | "ref" | "pallas" |
+    "xla"): "ref" is the unfused einsum chain, "pallas"/"xla" run the
+    fused panel loop of ``kernels.emu_matmul`` in one kernel per GEMM.
+    "auto" consults ``REPRO_EMU_KERNEL`` and then the platform default
+    (fused Pallas on TPU, ref elsewhere)."""
 
     name: str = "emu"
     stateful_hardware = True
+    emu_kernel: str = "auto"
 
     def matmul(self, a, b, cfg, key=None, *, mask=None):
         from repro.hardware import channel  # lazy: hardware imports us
 
-        return channel.emulated_matmul(a, b, cfg, key=key, mask=mask)
+        return channel.emulated_matmul(a, b, cfg, key=key, mask=mask,
+                                       kernel=self.emu_kernel)
 
 
 BACKENDS: dict[str, PhotonicBackend] = {}

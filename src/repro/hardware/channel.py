@@ -37,6 +37,8 @@ it; the Trainer jits it as part of the train step.
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -84,9 +86,12 @@ def tile_operands(a_n, b_n, cfg):
     return a_t, b_t, nk
 
 
-def realized_weights(w_target, cfg, residual=None):
-    """The full inscription path: targets -> commanded heaters -> physical
-    detunings (leak + drift residual) -> realized Lorentzian weights.
+def effective_deltas(w_target, cfg, residual=None):
+    """The control-plane half of the inscription path: targets ->
+    commanded heaters -> physical detunings (crosstalk leak + drift
+    residual).  ``realized_weights`` maps these through the Lorentzian;
+    the fused kernels (``kernels.emu_matmul``) take them as-is and apply
+    the transfer in-kernel.
 
     ``w_target``: the bus-tiled (nm, n_alive, rows, nj, cols) layout, a
     bus-free (..., rows, nk, cols) panel stack, or a bare (rows, cols)
@@ -111,7 +116,16 @@ def realized_weights(w_target, cfg, residual=None):
             delta_eff = delta_eff + residual[..., :, None, :]
         else:
             delta_eff = delta_eff + residual
-    return mrr.ring_weight(delta_eff, device.gamma)
+    return delta_eff
+
+
+def realized_weights(w_target, cfg, residual=None):
+    """The full inscription path: targets -> commanded heaters -> physical
+    detunings (leak + drift residual) -> realized Lorentzian weights.
+    (See ``effective_deltas`` for the layout/residual conventions.)"""
+    device = cfg.mrr or mrr.MRRConfig()
+    return mrr.ring_weight(effective_deltas(w_target, cfg, residual),
+                           device.gamma)
 
 
 def _physical_bus_effective_deltas(w_target, cfg, device):
@@ -154,6 +168,28 @@ def _per_pass_sigma(cfg) -> float:
     raise ValueError(cfg.noise_convention)
 
 
+def alive_residual(residual, cfg):
+    """Slice a carried drift/cal residual down to the panel schedule's
+    alive buses: carried state spans the physical (n_buses, rows, cols)
+    grid; the schedule only touches the surviving banks."""
+    if residual is not None and cfg.failed_buses and residual.ndim == 3:
+        residual = jnp.take(
+            residual, jnp.asarray(photonics.alive_bus_indices(cfg)), axis=0)
+    return residual
+
+
+def alive_dead_ring_mask(cfg):
+    """Fabrication yield: dead rings read 0 at the BPD whatever was
+    commanded — a chip-fixed mask over the physical ring grid, sliced to
+    the alive buses.  None when the device has no dead rings."""
+    device = cfg.mrr or mrr.MRRConfig()
+    if device.dead_ring_rate <= 0.0:
+        return None
+    phys = mrr.dead_ring_mask(
+        device, (max(cfg.n_buses, 1), cfg.bank_rows, cfg.bank_cols))
+    return jnp.take(phys, jnp.asarray(photonics.alive_bus_indices(cfg)), axis=0)
+
+
 def bank_product(a_n, b_n, cfg, key=None, *, residual=None):
     """Noisy panel-accumulated product of normalised operands.
 
@@ -163,19 +199,11 @@ def bank_product(a_n, b_n, cfg, key=None, *, residual=None):
     t, _k = a_n.shape
     m = b_n.shape[0]
     a_t, b_t, n_panels = tile_operands(a_n, b_n, cfg)
-    alive_idx = jnp.asarray(photonics.alive_bus_indices(cfg))
-    if residual is not None and cfg.failed_buses and residual.ndim == 3:
-        # carried state spans the physical (n_buses, rows, cols) grid; the
-        # schedule only touches the alive banks
-        residual = jnp.take(residual, alive_idx, axis=0)
+    residual = alive_residual(residual, cfg)
     w_eff = realized_weights(b_t, cfg, residual)
-    if device.dead_ring_rate > 0.0:
-        # fabrication yield: dead rings read 0 at the BPD whatever was
-        # commanded — a chip-fixed mask over the physical ring grid
-        phys = mrr.dead_ring_mask(
-            device, (max(cfg.n_buses, 1), cfg.bank_rows, cfg.bank_cols))
-        alive = jnp.take(phys, alive_idx, axis=0)
-        w_eff = w_eff * alive[..., :, None, :]
+    dead = alive_dead_ring_mask(cfg)
+    if dead is not None:
+        w_eff = w_eff * dead[..., :, None, :]
     # one einsum over all (nm, bus, cycle) panels: p[t, i, r, q, j] is the
     # partial sum of output row block i, ring row r, bus q, bus-cycle j
     p = jnp.einsum("tqjc,iqrjc->tirqj", a_t, w_eff)
@@ -211,7 +239,25 @@ def bank_product(a_n, b_n, cfg, key=None, *, residual=None):
     return out.reshape(t, -1)[:, :m]
 
 
-def emulated_matmul(a, b, cfg, key=None, *, mask=None, state=None):
+def resolve_emu_kernel(spec: str | None = None) -> str:
+    """Resolve the emu execution kernel: an explicit "ref" | "pallas" |
+    "xla" passes through; None/"auto" consults the ``REPRO_EMU_KERNEL``
+    environment variable and then the platform default — the fused Pallas
+    kernel on TPU, the unfused reference chain elsewhere (identical
+    numerics to the pre-fusion emulator).  "xla" is the fused schedule
+    compiled through lax.scan — the opt-in fast path off-TPU."""
+    if spec in (None, "auto"):
+        spec = os.environ.get("REPRO_EMU_KERNEL") or None
+    if spec in (None, "auto"):
+        spec = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if spec not in ("ref", "pallas", "xla"):
+        raise ValueError(
+            f"unknown emu kernel {spec!r} (auto | ref | pallas | xla)")
+    return spec
+
+
+def emulated_matmul(a, b, cfg, key=None, *, mask=None, state=None,
+                    kernel: str | None = None):
     """Device-emulated C = A @ Bᵀ — drop-in for
     ``photonics.photonic_matmul`` (the "emu" backend entry point).
 
@@ -219,15 +265,25 @@ def emulated_matmul(a, b, cfg, key=None, *, mask=None, state=None):
     optional (T, M) post-detection Hadamard epilogue.  ``state`` overrides
     the drift state; by default the Trainer's active ``drift.use_state``
     context is consulted, and with neither the bank is drift-free.
+    ``kernel`` picks the execution path (``resolve_emu_kernel``): "ref"
+    is the unfused chain above; "pallas"/"xla" run the fused panel loop
+    of ``kernels.emu_matmul`` (same physics, one kernel per GEMM).
     """
     if not cfg.enabled:
         out = jnp.einsum("tk,mk->tm", a, b)
         return out * mask if mask is not None else out
+    kernel = resolve_emu_kernel(kernel)
     a_n, b_n, s_a, s_b = photonics.normalise_operands(a, b, cfg)
     if state is None:
         state = drift_lib.active_state()
     residual = drift_lib.residual(state) if state is not None else None
-    out = bank_product(a_n, b_n, cfg, key, residual=residual)
+    if kernel == "ref":
+        out = bank_product(a_n, b_n, cfg, key, residual=residual)
+    else:
+        from repro.kernels import emu_matmul  # lazy: kernels import us
+
+        out = emu_matmul.fused_bank_product(a_n, b_n, cfg, key,
+                                            residual=residual, impl=kernel)
     out = out * (s_a * s_b)
     out = out * mask if mask is not None else out
     return out.astype(jnp.result_type(a, b))

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 # f32 cannot resolve weights closer to 1 than its epsilon — clip there even
@@ -122,12 +123,15 @@ def inscribe(w, cfg: MRRConfig):
 
 
 def _shifted(x, axis: int, off: int):
-    """x shifted by ``off`` along ``axis``, zero-filled at the edge."""
+    """x shifted by ``off`` along ``axis``, zero-filled at the edge.
+    Static pad + slice (not a gather): this runs inside the inscription's
+    Jacobi sweeps on megaring panel stacks, where an indexed ``take``
+    costs ~10× the copy."""
     n = x.shape[axis]
     pad = [(0, 0)] * x.ndim
     pad[axis] = (max(off, 0), max(-off, 0))
     lo = max(-off, 0)
-    return jnp.pad(x, pad).take(jnp.arange(lo, lo + n), axis=axis)
+    return jax.lax.slice_in_dim(jnp.pad(x, pad), lo, lo + n, axis=axis)
 
 
 def grid_axes(x) -> tuple[int, int]:
@@ -148,14 +152,28 @@ def bus_axis_of(x) -> int | None:
     return -4 if x.ndim >= 5 else None
 
 
+def _edge_pair_sum(x, axis: int):
+    """x shifted +1 plus x shifted −1 along ``axis`` (zero edges) off ONE
+    shared (1, 1)-padded buffer.  Numerically identical to two ``_shifted``
+    calls added in (+1, −1) order, but XLA:CPU fuses the shared pad where
+    separate pads get duplicated into every consumer of the Jacobi
+    expansion — on megaring panel stacks that duplication is ~3× the whole
+    inscription cost."""
+    n = x.shape[axis]
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (1, 1)
+    xp = jnp.pad(x, pad)
+    return (jax.lax.slice_in_dim(xp, 0, n, axis=axis)
+            + jax.lax.slice_in_dim(xp, 2, 2 + n, axis=axis))
+
+
 def neighbor_sum(delta, row_axis: int | None = None, col_axis: int | None = None):
     """Sum of the 4 nearest neighbours on the physical (rows, cols) ring
     grid — the thermal-crosstalk aggressor field.  Axes default to the
     layout inferred by ``grid_axes``."""
     if row_axis is None or col_axis is None:
         row_axis, col_axis = grid_axes(delta)
-    return (_shifted(delta, row_axis, 1) + _shifted(delta, row_axis, -1)
-            + _shifted(delta, col_axis, 1) + _shifted(delta, col_axis, -1))
+    return _edge_pair_sum(delta, row_axis) + _edge_pair_sum(delta, col_axis)
 
 
 def crosstalk_leak(delta_cmd, cfg: MRRConfig, row_axis: int | None = None,
@@ -170,8 +188,7 @@ def crosstalk_leak(delta_cmd, cfg: MRRConfig, row_axis: int | None = None,
         if bus_axis is None:
             bus_axis = bus_axis_of(delta_cmd)
         if bus_axis is not None and delta_cmd.shape[bus_axis] > 1:
-            bus = cfg.bus_crosstalk * (_shifted(delta_cmd, bus_axis, 1)
-                                       + _shifted(delta_cmd, bus_axis, -1))
+            bus = cfg.bus_crosstalk * _edge_pair_sum(delta_cmd, bus_axis)
             leak = bus if leak is None else leak + bus
     if leak is None:
         return jnp.zeros_like(delta_cmd)

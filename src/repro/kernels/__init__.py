@@ -1,5 +1,13 @@
-from repro.kernels import ops, ref
+from repro.kernels import emu_matmul, ops, ref
 from repro.kernels.dfa_gradient import dfa_gradient_pallas
+from repro.kernels.emu_matmul import fused_bank_product
 from repro.kernels.photonic_matmul import photonic_matmul_pallas
 
-__all__ = ["ops", "ref", "dfa_gradient_pallas", "photonic_matmul_pallas"]
+__all__ = [
+    "emu_matmul",
+    "fused_bank_product",
+    "ops",
+    "ref",
+    "dfa_gradient_pallas",
+    "photonic_matmul_pallas",
+]

@@ -25,9 +25,11 @@ Entry points: ``api.build_session(schedule="auto")``,
 ``benchmarks/pipeline_sim.py``, ``benchmarks/serving.py``.
 """
 
-from repro.sim.autotune import (DEFAULT_BUS_COUNTS, DEFAULT_SLOT_COUNTS,
-                                Candidate, ServingCandidate, TunedSchedule,
-                                TunedServing, autotune, autotune_serving)
+from repro.sim.autotune import (DEFAULT_BUS_COUNTS, DEFAULT_RECAL_CANDIDATES,
+                                DEFAULT_SLOT_COUNTS, Candidate,
+                                ServingCandidate, TunedSchedule, TunedServing,
+                                autotune, autotune_serving,
+                                expected_drift_sigma)
 from repro.sim.components import STAGES, StageTimes, bank_power_w, stage_times
 from repro.sim.pipeline import (Gemm, PipelineReport, dfa_backward_workload,
                                 forward_workload, panel_schedule, simulate)
@@ -36,9 +38,9 @@ from repro.sim.serving import (RequestSpec, ServiceModel, ServingReport,
                                simulate_serving)
 
 __all__ = [
-    "DEFAULT_BUS_COUNTS", "DEFAULT_SLOT_COUNTS", "Candidate",
-    "ServingCandidate", "TunedSchedule", "TunedServing", "autotune",
-    "autotune_serving",
+    "DEFAULT_BUS_COUNTS", "DEFAULT_RECAL_CANDIDATES", "DEFAULT_SLOT_COUNTS",
+    "Candidate", "ServingCandidate", "TunedSchedule", "TunedServing",
+    "autotune", "autotune_serving", "expected_drift_sigma",
     "STAGES", "StageTimes", "bank_power_w", "stage_times",
     "Gemm", "PipelineReport", "dfa_backward_workload", "forward_workload",
     "panel_schedule", "simulate",

@@ -28,12 +28,37 @@ and latency the constraint, where training tuning is the reverse.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core import photonics
 from repro.sim import components, pipeline
 
 DEFAULT_BUS_COUNTS = (1, 2, 4, 8)
 DEFAULT_TILINGS = ("panel", "layer")
+DEFAULT_RECAL_CANDIDATES = (0, 100, 250, 500, 1000)
+
+
+def expected_drift_sigma(device, recalibrate_every: int) -> float:
+    """Expected per-ring detuning residual (OU model) at the end of a
+    recalibration window of ``recalibrate_every`` training steps.
+
+    The bank's resonance drift is the OU process of ``hardware.drift``:
+    stationary σ = ``drift_sigma``, step time-constant ``drift_tau``.  A
+    recalibration measures and cancels the drift up to ``cal_noise``; the
+    residual then regrows toward stationary, so just before the next sweep
+
+        σ_resid² = drift_sigma² · (1 − exp(−2·every/τ)) + cal_noise²
+
+    ``recalibrate_every <= 0`` means never: the stationary drift_sigma.
+    This is the accuracy proxy the autotuner holds under ``drift_budget``
+    while pricing the sweep's sim-time cost (``PipelineReport.recal_s``).
+    """
+    if device is None or device.drift_sigma <= 0:
+        return 0.0
+    if recalibrate_every <= 0:
+        return float(device.drift_sigma)
+    grow = 1.0 - math.exp(-2.0 * recalibrate_every / device.drift_tau)
+    return math.sqrt(device.drift_sigma ** 2 * grow + device.cal_noise ** 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +70,9 @@ class Candidate:
     feasible: bool
     wall_clock_s: float | None  # None when skipped on power
     report: pipeline.PipelineReport | None
+    # recalibration co-tuning (defaults keep positional callers working)
+    recalibrate_every: int = 0
+    drift_resid: float = 0.0  # expected_drift_sigma at this cadence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +86,11 @@ class TunedSchedule:
     report: pipeline.PipelineReport
     power_budget_w: float | None
     candidates: tuple
+    # recalibration co-tuning (defaulted: pre-existing callers unchanged)
+    recalibrate_every: int = 0
+    drift_resid: float = 0.0
+    drift_budget: float | None = None
+    digital_s: float = 0.0
 
     @property
     def wall_clock_s(self) -> float:
@@ -72,11 +105,14 @@ class TunedSchedule:
 
     def describe(self) -> str:
         r = self.report
+        recal = (f" recal@{self.recalibrate_every} "
+                 f"(σ_resid={self.drift_resid:.3f})"
+                 if self.recalibrate_every > 0 else "")
         return (f"n_buses={self.n_buses} tiling={self.tiling} "
                 f"f_s={self.f_s / 1e9:.2f}GHz -> "
                 f"{r.wall_clock_s * 1e6:.2f}us/step "
                 f"{r.macs_per_s / 1e12:.3f}TMAC/s {r.power_w:.1f}W "
-                f"{r.pj_per_mac:.2f}pJ/MAC")
+                f"{r.pj_per_mac:.2f}pJ/MAC{recal}")
 
 
 def default_f_s_grid(f_max: float) -> tuple:
@@ -202,11 +238,25 @@ def autotune(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
              bus_counts: tuple = DEFAULT_BUS_COUNTS,
              f_s_grid: tuple | None = None,
              tilings: tuple = DEFAULT_TILINGS,
-             include_weight_update: bool = True) -> TunedSchedule:
+             include_weight_update: bool = True,
+             digital_s: float = 0.0,
+             recal_candidates: tuple = (0,),
+             drift_budget: float | None = None) -> TunedSchedule:
     """Exhaustive search of the (small) schedule space on the real
-    workload.  Raises ValueError when no candidate fits the budget."""
+    workload.  Raises ValueError when no candidate fits the budget.
+
+    ``digital_s`` overlaps the measured host-side step time with every
+    candidate timeline (``pipeline.simulate``'s max(compute, digital) —
+    feed it from the fused-kernel bench).  ``recal_candidates`` widens the
+    search over the recalibration cadence: each cadence pays its amortised
+    heater sweep in sim time while ``expected_drift_sigma`` prices its
+    accuracy; candidates whose expected residual exceeds ``drift_budget``
+    are infeasible.  The fastest feasible schedule wins; ties go to lower
+    power, fewer buses, then lower drift residual."""
     if f_s_grid is None:
         f_s_grid = default_f_s_grid(pcfg.f_s)
+    device = pcfg.mrr
+    recal_grid = tuple(sorted(set(int(e) for e in recal_candidates)))
     candidates = []
     best = None
     for n_buses in sorted(set(bus_counts)):
@@ -220,27 +270,48 @@ def autotune(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
                                             n_buses=n_alive)
             if power_budget_w is not None and power > power_budget_w:
                 for tiling in tilings:
-                    candidates.append(Candidate(n_buses, tiling, f_s, power,
-                                                False, None, None))
+                    for every in recal_grid:
+                        candidates.append(Candidate(
+                            n_buses, tiling, f_s, power, False, None, None,
+                            every, expected_drift_sigma(device, every)))
                 continue
             for tiling in tilings:
-                report = pipeline.simulate(
-                    workload, cand_cfg, ecfg, f_s=f_s, tiling=tiling,
-                    include_weight_update=include_weight_update)
-                cand = Candidate(n_buses, tiling, f_s, power, True,
-                                 report.wall_clock_s, report)
-                candidates.append(cand)
-                # fastest wins; ties go to the lower-power, fewer-bus chip
-                key = (report.wall_clock_s, power, n_buses)
-                if best is None or key < best[0]:
-                    best = (key, cand)
+                for every in recal_grid:
+                    resid = expected_drift_sigma(device, every)
+                    in_budget = drift_budget is None or resid <= drift_budget
+                    report = pipeline.simulate(
+                        workload, cand_cfg, ecfg, f_s=f_s, tiling=tiling,
+                        include_weight_update=include_weight_update,
+                        digital_s=digital_s, recalibrate_every=every)
+                    cand = Candidate(n_buses, tiling, f_s, power, in_budget,
+                                     report.wall_clock_s, report,
+                                     every, resid)
+                    candidates.append(cand)
+                    if not in_budget:
+                        continue
+                    # fastest wins; ties go to the lower-power, fewer-bus
+                    # chip, then the tighter-calibrated schedule
+                    key = (report.wall_clock_s, power, n_buses, resid)
+                    if best is None or key < best[0]:
+                        best = (key, cand)
     if best is None:
-        min_power = min(c.power_w for c in candidates)
+        in_power = [c for c in candidates
+                    if power_budget_w is None or c.power_w <= power_budget_w]
+        if not in_power:
+            min_power = min(c.power_w for c in candidates)
+            raise ValueError(
+                f"no schedule fits power_budget_w={power_budget_w:.2f} "
+                f"(cheapest candidate needs {min_power:.2f} W)")
+        min_resid = min(c.drift_resid for c in in_power)
         raise ValueError(
-            f"no schedule fits power_budget_w={power_budget_w:.2f} "
-            f"(cheapest candidate needs {min_power:.2f} W)")
+            f"no in-power schedule meets drift_budget={drift_budget:.4f} "
+            f"(tightest cadence leaves σ_resid={min_resid:.4f} — add "
+            f"smaller recal_candidates or relax the budget)")
     _, cand = best
     return TunedSchedule(
         n_buses=cand.n_buses, tiling=cand.tiling, f_s=cand.f_s,
         power_w=cand.power_w, report=cand.report,
-        power_budget_w=power_budget_w, candidates=tuple(candidates))
+        power_budget_w=power_budget_w, candidates=tuple(candidates),
+        recalibrate_every=cand.recalibrate_every,
+        drift_resid=cand.drift_resid, drift_budget=drift_budget,
+        digital_s=digital_s)

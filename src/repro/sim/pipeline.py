@@ -142,6 +142,12 @@ class PipelineReport:
     f_s: float
     tiling: str
     events: list  # (bus, stage, start_s, end_s, gemm) — capped sample
+    # measured-feedback overlap model (defaults keep positional callers
+    # working): the host's digital step time runs concurrently with the
+    # photonic stream, and in-situ recalibration amortises a heater sweep
+    digital_s: float = 0.0  # measured digital-side step time (overlapped)
+    recal_s: float = 0.0  # amortised per-step recalibration epilogue
+    recalibrate_every: int = 0  # cadence the recal_s amortisation assumes
 
     def as_metrics(self, prefix: str = "") -> dict:
         """Flat numeric view for BENCH_*.json emission."""
@@ -153,6 +159,8 @@ class PipelineReport:
             f"{prefix}utilisation": self.utilisation,
             f"{prefix}pj_per_mac": self.pj_per_mac,
             f"{prefix}power_w": self.power_w,
+            f"{prefix}digital_us": self.digital_s * 1e6,
+            f"{prefix}recal_us": self.recal_s * 1e6,
         }
         for stage, occ in self.occupancy.items():
             out[f"{prefix}occ_{stage}"] = occ
@@ -199,9 +207,19 @@ def _assign_slots(workload, pcfg, tiling: str):
 
 def simulate(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
              f_s: float | None = None, tiling: str = "panel",
-             include_weight_update: bool = True) -> PipelineReport:
+             include_weight_update: bool = True,
+             digital_s: float = 0.0,
+             recalibrate_every: int = 0) -> PipelineReport:
     """Replay one training step's panel schedule as per-bus event
-    timelines; see the module docstring for the event model."""
+    timelines; see the module docstring for the event model.
+
+    ``digital_s`` is the measured host-side (digital) step time — quant
+    prep, optimizer, bookkeeping — which runs concurrently with the
+    photonic stream, so the step's front half is max(compute, digital)
+    (feed it from ``BENCH_emu_kernel``'s fused-step measurement).
+    ``recalibrate_every`` > 0 amortises one in-situ recalibration heater
+    sweep (``st.heater``) over that many steps as a per-step epilogue —
+    the sim-time cost the autotuner weighs against drift accuracy."""
     if not workload:
         raise ValueError("empty workload")
     st = components.stage_times(pcfg, f_s=f_s)
@@ -248,7 +266,8 @@ def simulate(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
                 events.append((q, "heater", compute_s,
                                compute_s + st.heater, "weight-update"))
             stage_busy["heater"] += st.heater
-    wall = compute_s + weight_update_s
+    recal_s = st.heater / recalibrate_every if recalibrate_every > 0 else 0.0
+    wall = max(compute_s, digital_s) + weight_update_s + recal_s
 
     total_cycles = max(
         sum(n_slots for _g, n_slots, _r in per_bus[q]) for q in range(n_alive))
@@ -279,4 +298,7 @@ def simulate(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
         f_s=f,
         tiling=tiling,
         events=events,
+        digital_s=digital_s,
+        recal_s=recal_s,
+        recalibrate_every=recalibrate_every,
     )

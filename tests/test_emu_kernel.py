@@ -1,0 +1,282 @@
+"""Fused emu kernel (kernels.emu_matmul) — drop-in equivalence with the
+unfused ``channel.bank_product`` chain, the pallas↔xla bit-stream contract,
+``noise_sigma_total`` accounting, the ``emu_kernel`` seam (env/flag/session
+resolution), and the fused path through full training sessions."""
+
+import dataclasses
+import os
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import photonics
+from repro.hardware import channel, drift, mrr
+from repro.kernels import emu_matmul
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _operands(t, m, k, cfg, seed=0):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(ka, (t, k), jnp.float32)
+    b = jax.random.normal(kb, (m, k), jnp.float32)
+    a_n, b_n, _sa, _sb = photonics.normalise_operands(a, b, cfg)
+    return a_n, b_n
+
+
+def _quiet(n_buses=1, failed_buses=(), dead=0.0, adc_bits=8):
+    """A noiseless device config (drift off, σ=0): fused and unfused paths
+    must agree to f32 tolerance, not just statistically."""
+    return photonics.PhotonicConfig(
+        noise_std=0.0, n_buses=n_buses, failed_buses=failed_buses,
+        mrr=mrr.MRRConfig(adc_bits=adc_bits, drift_sigma=0.0,
+                          dead_ring_rate=dead))
+
+
+# ---------------------------------------------------------------------------
+# noiseless bit-tolerance vs the unfused chain
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize(
+    "t,m,k,n_buses", [
+        (4, 50, 20, 1),     # exactly one bank panel
+        (7, 61, 83, 2),     # ragged in every dimension
+        (5, 61, 83, 5),     # panels not divisible by buses (idle slots)
+        (16, 130, 260, 4),  # multi-tile rows and cycles
+    ])
+def test_fused_matches_unfused_noiseless(impl, t, m, k, n_buses):
+    cfg = _quiet(n_buses=n_buses)
+    a_n, b_n = _operands(t, m, k, cfg)
+    ref = channel.bank_product(a_n, b_n, cfg, None)
+    out = emu_matmul.fused_bank_product(a_n, b_n, cfg, None, impl=impl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_matches_unfused_failed_bus_and_dead_rings():
+    cfg = _quiet(n_buses=3, failed_buses=(1,), dead=0.05)
+    a_n, b_n = _operands(9, 120, 130, cfg)
+    ref = channel.bank_product(a_n, b_n, cfg, None)
+    for impl in ("xla", "pallas"):
+        out = emu_matmul.fused_bank_product(a_n, b_n, cfg, None, impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_matches_unfused_with_carried_drift_state():
+    """A nonzero carried residual perturbs the detunings identically on
+    both paths (drift σ stays 0 so the comparison is deterministic)."""
+    cfg = _quiet(n_buses=2)
+    a_n, b_n = _operands(6, 77, 95, cfg)
+    state = drift.init_state(cfg)
+    state["drift"] = 0.08 * jax.random.normal(KEY, state["drift"].shape)
+    residual = drift.residual(state)
+    ref = channel.bank_product(a_n, b_n, cfg, None, residual=residual)
+    for impl in ("xla", "pallas"):
+        out = emu_matmul.fused_bank_product(a_n, b_n, cfg, None,
+                                            residual=residual, impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_no_adc_path():
+    cfg = _quiet(n_buses=2, adc_bits=None)
+    a_n, b_n = _operands(3, 55, 44, cfg)
+    ref = channel.bank_product(a_n, b_n, cfg, None)
+    out = emu_matmul.fused_bank_product(a_n, b_n, cfg, None, impl="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    t=st.integers(1, 17), m=st.integers(1, 140), k=st.integers(1, 150),
+    n_buses=st.integers(1, 5), adc_bits=st.sampled_from([None, 4, 8]),
+    dead=st.sampled_from([0.0, 0.1]),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_fused_equivalence_fuzz(t, m, k, n_buses, adc_bits, dead):
+    """Property: fused-xla ≡ unfused over random shapes, bus counts, ADC
+    widths and dead-ring masks (noiseless)."""
+    cfg = _quiet(n_buses=n_buses, adc_bits=adc_bits, dead=dead)
+    a_n, b_n = _operands(t, m, k, cfg, seed=t * 977 + m * 31 + k)
+    ref = channel.bank_product(a_n, b_n, cfg, None)
+    out = emu_matmul.fused_bank_product(a_n, b_n, cfg, None, impl="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# noise: pallas↔xla bit-stream contract + σ accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shot", [0.0, 0.05])
+def test_pallas_and_xla_share_the_noise_stream(shot):
+    """Both impls draw from the same (key, slot, element) counters, so the
+    noisy outputs agree to accumulation-order tolerance — not merely in
+    distribution."""
+    cfg = photonics.PhotonicConfig(
+        noise_std=0.202, n_buses=2,
+        mrr=mrr.MRRConfig(adc_bits=8, drift_sigma=0.0, shot_noise=shot))
+    a_n, b_n = _operands(9, 73, 100, cfg)
+    x = emu_matmul.fused_bank_product(a_n, b_n, cfg, KEY, impl="xla")
+    p = emu_matmul.fused_bank_product(a_n, b_n, cfg, KEY, impl="pallas")
+    np.testing.assert_allclose(np.asarray(x), np.asarray(p),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_noise_requires_key():
+    cfg = photonics.PhotonicConfig(noise_std=0.1, n_buses=1,
+                                   mrr=mrr.MRRConfig(drift_sigma=0.0))
+    a_n, b_n = _operands(2, 10, 20, cfg)
+    with pytest.raises(ValueError, match="PRNG key"):
+        emu_matmul.fused_bank_product(a_n, b_n, cfg, None, impl="xla")
+
+
+def test_fused_noise_matches_sigma_accounting():
+    """Accumulated fused-path noise must follow ``noise_sigma_total``'s
+    real-panel accounting (idle padded slots draw nothing)."""
+    cfg = photonics.PhotonicConfig(
+        noise_std=0.202, n_buses=4,
+        mrr=mrr.MRRConfig(adc_bits=None, drift_sigma=0.0))
+    k_dim = 1024
+    a_n, b_n = _operands(16, 64, k_dim, cfg)
+    clean = emu_matmul.fused_bank_product(
+        a_n, b_n, dataclasses.replace(cfg, noise_std=0.0), None, impl="xla")
+    f = jax.jit(lambda kk: emu_matmul.fused_bank_product(
+        a_n, b_n, cfg, kk, impl="xla"))
+    devs = jnp.stack([f(jax.random.fold_in(KEY, i)) - clean
+                      for i in range(48)])
+    # operands are normalised, so expected σ uses unit scales
+    expected = photonics.noise_sigma_total(k_dim, 1.0, 1.0, cfg)
+    assert abs(float(jnp.std(devs)) / expected - 1.0) < 0.05
+    assert abs(float(jnp.mean(devs))) < 0.05 * expected
+
+
+def test_counter_gaussian_moments():
+    """The Irwin–Hall(4) draw: exact mean/unit variance, symmetric, and
+    the designed mild kurtosis deficit (2.7 vs 3)."""
+    c0 = jax.lax.broadcasted_iota(jnp.uint32, (1 << 19,), 0)
+    z = emu_matmul.counter_gaussian(jnp.uint32(3), jnp.uint32(5), c0,
+                                    jnp.uint32(11))
+    assert abs(float(z.mean())) < 5e-3
+    assert abs(float(z.std()) - 1.0) < 5e-3
+    assert abs(float(jnp.mean(z ** 3))) < 2e-2
+    assert abs(float(jnp.mean(z ** 4)) - 2.7) < 5e-2
+
+
+def test_shot_stream_is_distinct():
+    """Thermal and shot draws come from disjoint counter streams."""
+    c0 = jax.lax.broadcasted_iota(jnp.uint32, (4096,), 0)
+    z1 = emu_matmul.counter_gaussian(jnp.uint32(3), jnp.uint32(5), c0,
+                                     jnp.uint32(0))
+    z2 = emu_matmul.counter_gaussian(
+        jnp.uint32(3), jnp.uint32(5),
+        c0 ^ jnp.uint32(emu_matmul._SHOT_STREAM), jnp.uint32(0))
+    corr = float(jnp.corrcoef(z1, z2)[0, 1])
+    assert abs(corr) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# the emu_kernel seam: resolution, env override, session plumbing
+# ---------------------------------------------------------------------------
+
+def test_resolve_emu_kernel_specs():
+    assert channel.resolve_emu_kernel("ref") == "ref"
+    assert channel.resolve_emu_kernel("xla") == "xla"
+    assert channel.resolve_emu_kernel("pallas") == "pallas"
+    with pytest.raises(ValueError, match="unknown emu kernel"):
+        channel.resolve_emu_kernel("cuda")
+
+
+def test_resolve_emu_kernel_env(monkeypatch):
+    monkeypatch.setenv("REPRO_EMU_KERNEL", "xla")
+    assert channel.resolve_emu_kernel(None) == "xla"
+    assert channel.resolve_emu_kernel("auto") == "xla"
+    # explicit spec wins over the environment
+    assert channel.resolve_emu_kernel("ref") == "ref"
+    monkeypatch.setenv("REPRO_EMU_KERNEL", "")
+    # empty string is "unset", not an unknown spec
+    assert channel.resolve_emu_kernel(None) in ("ref", "pallas")
+
+
+def test_emulated_matmul_kernel_seam():
+    cfg = _quiet(n_buses=2)
+    a = jax.random.normal(KEY, (5, 70), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (33, 70), jnp.float32)
+    ref = channel.emulated_matmul(a, b, cfg, kernel="ref")
+    out = channel.emulated_matmul(a, b, cfg, kernel="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_build_session_emu_kernel_requires_emu_backend():
+    with pytest.raises(ValueError, match="requires backend='emu'"):
+        api.build_session(arch="mnist_mlp", smoke=True, emu_kernel="xla")
+    with pytest.raises(ValueError, match="unknown emu kernel"):
+        api.build_session(arch="mnist_mlp", smoke=True, backend="emu",
+                          hardware="emu_ideal", emu_kernel="bogus")
+
+
+@pytest.mark.parametrize("algo", ["bp", "dfa", "dfa-fused", "dfa-layerwise"])
+def test_session_fused_matches_ref_all_algorithms(algo):
+    """One train step per algorithm on a noiseless emu device: the fused
+    session must land on the same loss as the unfused one."""
+    hw = _quiet(n_buses=2)
+    losses = {}
+    for kern in ("ref", "xla"):
+        session = api.build_session(arch="mnist_mlp", algo=algo, smoke=True,
+                                    backend="emu", hardware=hw,
+                                    emu_kernel=kern, recalibrate_every=0,
+                                    log_every=10 ** 9)
+        key = jax.random.PRNGKey(0)
+        batch = {
+            "x": jax.random.normal(key, (8, session.model.in_dim)),
+            "y": jax.random.randint(key, (8,), 0, session.model.n_classes),
+        }
+        _state, metrics = session.fit(lambda step: batch, total_steps=1,
+                                      verbose=False)
+        losses[kern] = float(metrics["loss"])
+    assert losses["xla"] == pytest.approx(losses["ref"], rel=1e-4)
+
+
+def test_trainer_fit_smoke_fused_drifting_device():
+    """Two steps of the full drifting-device loop (noise + OU drift +
+    in-situ recalibration) through the fused kernel: finite loss, carried
+    hardware state."""
+    session = api.build_session(arch="mnist_mlp", algo="dfa", smoke=True,
+                                backend="emu", hardware="emu_onchip",
+                                emu_kernel="xla", recalibrate_every=1,
+                                log_every=10 ** 9)
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "x": jax.random.normal(key, (8, session.model.in_dim)),
+        "y": jax.random.randint(key, (8,), 0, session.model.n_classes),
+    }
+    _state, metrics = session.fit(lambda step: batch, total_steps=2,
+                                  verbose=False)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_backend_field_routes_kernel(monkeypatch):
+    """EmulatedMRRBackend.emu_kernel reaches emulated_matmul: patching the
+    fused entry point must intercept the projection."""
+    calls = []
+    real = emu_matmul.fused_bank_product
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("impl"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(emu_matmul, "fused_bank_product", spy)
+    cfg = _quiet(n_buses=1)
+    a = jax.random.normal(KEY, (3, 40), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (21, 40), jnp.float32)
+    backend = photonics.EmulatedMRRBackend(emu_kernel="xla")
+    backend.matmul(a, b, cfg, key=None)
+    assert calls == ["xla"]

@@ -216,3 +216,102 @@ def test_budget_kwargs_require_auto_schedule():
         api.build_session(arch="mnist_mlp", smoke=True, power_budget_w=50.0)
     with pytest.raises(ValueError, match="require schedule='auto'"):
         api.build_session(arch="mnist_mlp", smoke=True, schedule_batch=32)
+
+
+# ---------------------------------------------------------------------------
+# measured-feedback loop (PR 7): digital overlap, recal cost, co-tuning
+# ---------------------------------------------------------------------------
+
+def test_simulate_digital_overlap():
+    """The digital side overlaps the photonic timeline: wall clock is
+    max(compute, digital) + epilogues, not their sum."""
+    work = _qwen_workload(t=8)
+    cfg = photonics.PhotonicConfig(n_buses=2)
+    base = sim.simulate(work, cfg, tiling="panel")
+    hidden = sim.simulate(work, cfg, tiling="panel",
+                          digital_s=base.compute_s / 2)
+    assert hidden.wall_clock_s == pytest.approx(base.wall_clock_s)
+    dominating = sim.simulate(work, cfg, tiling="panel",
+                              digital_s=10 * base.wall_clock_s)
+    assert dominating.wall_clock_s > 9 * base.wall_clock_s
+    assert dominating.digital_s == pytest.approx(10 * base.wall_clock_s)
+
+
+def test_simulate_recalibration_amortised_cost():
+    """recalibrate_every prices the heater sweep at 1/every per step."""
+    work = _qwen_workload(t=8)
+    cfg = photonics.PhotonicConfig(n_buses=2)
+    base = sim.simulate(work, cfg, tiling="panel")
+    recal = sim.simulate(work, cfg, tiling="panel", recalibrate_every=100)
+    assert recal.recal_s > 0
+    assert recal.wall_clock_s == pytest.approx(
+        base.wall_clock_s + recal.recal_s)
+    sparser = sim.simulate(work, cfg, tiling="panel", recalibrate_every=1000)
+    assert sparser.recal_s == pytest.approx(recal.recal_s / 10)
+
+
+def test_expected_drift_sigma_monotone():
+    """OU residual: 0 with drift off, grows with the window, saturates at
+    the stationary σ, floors at the calibration noise."""
+    from repro.hardware import mrr
+
+    device = mrr.MRRConfig()  # drift_sigma=0.05, tau=1000, cal_noise=0.005
+    assert sim.expected_drift_sigma(None, 100) == 0.0
+    assert sim.expected_drift_sigma(device, 0) == device.drift_sigma
+    r100 = sim.expected_drift_sigma(device, 100)
+    r1000 = sim.expected_drift_sigma(device, 1000)
+    assert device.cal_noise < r100 < r1000 < device.drift_sigma
+
+
+def test_autotune_co_optimises_recalibration():
+    """Under a drift budget the tuner picks the sparsest cadence that
+    holds the residual under budget (cheapest recal epilogue wins)."""
+    work = _qwen_workload(t=8)
+    cfg = photonics.PhotonicConfig(
+        n_buses=2, mrr=__import__("repro.hardware.mrr",
+                                  fromlist=["MRRConfig"]).MRRConfig())
+    budget = 0.5 * cfg.mrr.drift_sigma
+    tuned = sim.autotune(work, cfg, tilings=("panel",),
+                         recal_candidates=sim.DEFAULT_RECAL_CANDIDATES,
+                         drift_budget=budget)
+    assert tuned.recalibrate_every > 0
+    assert tuned.drift_resid <= budget
+    # every sparser candidate in the grid must bust the budget
+    for every in sim.DEFAULT_RECAL_CANDIDATES:
+        if every == 0 or every <= tuned.recalibrate_every:
+            continue
+        assert sim.expected_drift_sigma(cfg.mrr, every) > budget
+    assert f"recal@{tuned.recalibrate_every}" in tuned.describe()
+
+
+def test_autotune_drift_budget_infeasible_raises():
+    work = _qwen_workload(t=8)
+    cfg = photonics.PhotonicConfig(
+        n_buses=2, mrr=__import__("repro.hardware.mrr",
+                                  fromlist=["MRRConfig"]).MRRConfig())
+    with pytest.raises(ValueError, match="drift_budget"):
+        sim.autotune(work, cfg, tilings=("panel",),
+                     recal_candidates=(0, 1000),
+                     drift_budget=1e-6)
+
+
+def test_build_session_recalibrate_auto():
+    """schedule='auto' + recalibrate_every='auto' lands the co-tuned
+    cadence in the TrainerConfig; digital_step_s feeds the overlap."""
+    session = api.build_session(arch="mnist_mlp", smoke=True,
+                                backend="emu", hardware="emu_onchip",
+                                schedule="auto", recalibrate_every="auto",
+                                digital_step_s=1e-5)
+    assert session.schedule is not None
+    assert session.schedule.recalibrate_every > 0
+    assert session.config.recalibrate_every == \
+        session.schedule.recalibrate_every
+    assert session.schedule.digital_s == pytest.approx(1e-5)
+
+
+def test_digital_step_kwargs_require_auto_schedule():
+    with pytest.raises(ValueError, match="require schedule='auto'"):
+        api.build_session(arch="mnist_mlp", smoke=True, digital_step_s=1e-5)
+    with pytest.raises(ValueError, match="require schedule='auto'"):
+        api.build_session(arch="mnist_mlp", smoke=True,
+                          recalibrate_every="auto")
