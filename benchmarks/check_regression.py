@@ -70,6 +70,14 @@ GATES: dict[str, dict[str, tuple[str, float] | str]] = {
         "auto_requests_per_s": ("higher", _WALL),
         "auto_p99_latency_ms": ("lower", _WALL),
     },
+    "obs": {
+        # observer-on / observer-off throughput on the fused emu step:
+        # both sides run back-to-back on the same host, so the ratio
+        # gates tight even on noisy runners (0.95 allows scheduler
+        # jitter while still catching an accidental per-step sync)
+        "throughput_ratio": ("higher", 0.05),
+        "on_steps_per_s": ("higher", _WALL),
+    },
 }
 
 

@@ -37,8 +37,11 @@ latency, requests/s and J/request vs offered load + the SLO-constrained
 serving autotuner) as ``BENCH_serving.json``, and the fused emu-kernel
 study (``benchmarks.emu_kernel``: fused vs unfused steps/s and MACs/s
 plus the measured-feedback schedule co-tuning) as
-``BENCH_emu_kernel.json``; combined with ``--smoke`` it also writes
-``BENCH_smoke.json``.  CI archives the ``BENCH_*.json`` files — they are
+``BENCH_emu_kernel.json``, and the observability overhead study
+(``benchmarks.obs_overhead``: observer-off vs observer-on fit throughput
+on the fused emu step, with the run's Chrome trace + metrics JSONL as
+artifacts) as ``BENCH_obs.json``; combined with ``--smoke`` it also
+writes ``BENCH_smoke.json``.  CI archives the ``BENCH_*.json`` files — they are
 the repo's perf trajectory, and ``benchmarks/check_regression.py`` gates
 changes against the committed ``benchmarks/baselines/``.
 """
@@ -356,6 +359,17 @@ def bench_emu_kernel(out_dir: str = ".", steps: int = 3) -> str:
     return path
 
 
+def bench_obs(out_dir: str = ".", steps: int = 96) -> str:
+    """Run the observability overhead study (observer-off vs observer-on
+    fit throughput on the fused emu step, trace + metrics artifacts) and
+    write BENCH_obs.json."""
+    ob = _sibling("obs_overhead")
+
+    path = ob.write_report(ob.run(steps=steps, out_dir=out_dir), out_dir)
+    print(f"[bench] wrote {path}", flush=True)
+    return path
+
+
 def _dryrun_path(out_dir: str = ".") -> str:
     """Where the roofline's dry-run record lives: the env override, an
     existing local ``results/dryrun.json``, else INSIDE the bench dir —
@@ -454,6 +468,7 @@ def main() -> None:
         bench_roofline(out_dir=args.bench_dir)
         bench_serving(out_dir=args.bench_dir)
         bench_emu_kernel(out_dir=args.bench_dir)
+        bench_obs(out_dir=args.bench_dir)
         return
     print("name,us_per_call,derived")
     for name, fn in TABLES:

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import algos, configs
+from repro import obs as obs_lib
 from repro.algos.dfa import DFAConfig
 from repro.core import feedback as fb_lib
 from repro.core import photonics
@@ -84,10 +85,25 @@ class Session:
     # the autotuned photonic schedule (repro.sim), when built with
     # schedule="auto"; None means the hardware config was taken as given
     schedule: typing.Any = None
+    # the bound repro.obs.Observer when built with observe=... (or attached
+    # later via Session.observe()); None means observability is off
+    observer: typing.Any = None
 
     @property
     def config(self) -> TrainerConfig:
         return self.trainer.cfg
+
+    # ---- observability ----
+    def observe(self, *, metrics_path: str | None = None,
+                trace_path: str | None = None):
+        """Attach (and return) an ``obs.Observer`` wired for this session:
+        hardware monitor on stateful-hw backends (with the autotuned
+        ``drift_budget`` when a schedule was planned), optional JSONL
+        metrics sink and trace output path.  ``fit``/``engine`` pick it
+        up automatically."""
+        self.observer = obs_lib.for_session(self, metrics_path=metrics_path,
+                                            trace_path=trace_path)
+        return self.observer
 
     # ---- training ----
     def init_state(self, key=None):
@@ -97,12 +113,15 @@ class Session:
         return self.trainer.step(state, batch)
 
     def fit(self, data_fn, total_steps: int, eval_fn=None, verbose: bool = True,
-            timer=None):
+            timer=None, observer=None):
         """Run the training loop; under ``data_parallel`` the batch dim is
         sharded across all local devices (see train.Trainer).  ``timer`` is
-        an optional ``repro.bench.StepTimer`` for throughput telemetry."""
+        an optional ``repro.bench.StepTimer`` for throughput telemetry;
+        ``observer`` an ``obs.Observer`` (defaults to the session's)."""
         return self.trainer.fit(data_fn, total_steps, eval_fn=eval_fn,
-                                verbose=verbose, timer=timer)
+                                verbose=verbose, timer=timer,
+                                observer=observer if observer is not None
+                                else self.observer)
 
     @property
     def mesh(self):
@@ -129,7 +148,7 @@ class Session:
     # ---- serving ----
     def engine(self, params=None, *, batch_slots: int = 8, max_len: int = 512,
                eos_id: int | None = None, prefill_chunk: int = 16,
-               hw_state=None, seed: int = 0):
+               hw_state=None, seed: int = 0, observer=None):
         """A ``serve.Engine`` on this session's (hardware, backend) cell.
 
         The session's backend choice carries over: ``auto``/``ref`` with
@@ -154,7 +173,9 @@ class Session:
                       max_len=max_len, eos_id=eos_id,
                       prefill_chunk=prefill_chunk, backend=backend,
                       photonics=hw_cfg if backend is not None else None,
-                      hw_state=hw_state, seed=seed)
+                      hw_state=hw_state, seed=seed,
+                      observer=observer if observer is not None
+                      else self.observer)
 
 
 def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
@@ -174,8 +195,14 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
                   ckpt_dir: str | None = None,
                   ckpt_every: int = 500, log_every: int = 50,
                   log_path: str | None = None,
-                  step_deadline_s: float | None = None) -> Session:
-    """Compose one cell of the algorithm × hardware × backend matrix."""
+                  step_deadline_s: float | None = None,
+                  observe=False) -> Session:
+    """Compose one cell of the algorithm × hardware × backend matrix.
+
+    ``observe``: ``False`` (default) runs without observability; ``True``
+    attaches a session-wired ``obs.Observer`` (hardware monitor on
+    stateful-hw backends); an ``Observer`` instance is taken as given.
+    """
     model = build_model(arch, smoke=smoke, dtype=dtype)
     algorithm = algos.get(algo)             # fail fast on unknown names
     backend_obj = photonics.get_backend(backend)  # (likewise for the backend)
@@ -270,5 +297,10 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
         log_every=log_every, log_path=log_path,
         step_deadline_s=step_deadline_s,
     )
-    return Session(model=model, algorithm=algorithm,
-                   trainer=Trainer(model, cfg), schedule=tuned)
+    session = Session(model=model, algorithm=algorithm,
+                      trainer=Trainer(model, cfg), schedule=tuned)
+    if observe is True:
+        session.observe()
+    elif observe:
+        session.observer = observe
+    return session

@@ -205,7 +205,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str, hlo_dir=None) -> d
         return rec
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
-    t0 = time.time()
+    t0 = time.monotonic()  # duration measurement: immune to wall-clock steps
     try:
         with sharding.use_mesh(mesh):
             if shape.kind == "train":
@@ -220,10 +220,10 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str, hlo_dir=None) -> d
         rec["status"] = "error"
         rec["reason"] = f"{type(ex).__name__}: {ex}"
         rec["traceback"] = traceback.format_exc()[-2000:]
-        rec["seconds"] = round(time.time() - t0, 1)
+        rec["seconds"] = round(time.monotonic() - t0, 1)
         return rec
 
-    rec["seconds"] = round(time.time() - t0, 1)
+    rec["seconds"] = round(time.monotonic() - t0, 1)
     rec["status"] = "ok"
     rec["chips"] = int(mesh.devices.size)
     rec["tokens"] = extra["tokens"]

@@ -53,6 +53,11 @@ def main():
     ap.add_argument("--bench-json", default=None, metavar="DIR",
                     help="write BENCH_serve_live.json with the measured "
                          "latency distribution to DIR")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace of the "
+                         "request lifecycles and engine ticks to PATH")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append obs metrics rows (JSONL) to PATH")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -63,6 +68,10 @@ def main():
     session = api.build_session(arch=args.arch, smoke=args.smoke, algo="bp",
                                 hardware=hardware, backend=args.backend,
                                 seed=args.seed)
+    observer = None
+    if args.trace_out or args.metrics_out:
+        observer = session.observe(metrics_path=args.metrics_out,
+                                   trace_path=args.trace_out)
     model = session.model
     params = model.init(jax.random.PRNGKey(args.seed))
     vocab = model.cfg.vocab_size
@@ -72,7 +81,7 @@ def main():
     reqs = [Request(prompt=[(7 * i + 3 + 13 * j) % vocab
                             for j in range(max(1, args.prompt_len))],
                     max_new=args.max_new) for i in range(args.requests)]
-    t0 = time.time()
+    t0 = time.monotonic()  # duration: monotonic, immune to wall-clock steps
     if args.arrival_rate:
         rng = np.random.default_rng(args.seed)
         arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
@@ -80,7 +89,7 @@ def main():
         done, ticks = eng.run_arrivals(reqs, arrivals.tolist())
     else:
         done, ticks = eng.run(reqs)
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
 
     total_tokens = sum(len(r.out) for r in done)
     ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
@@ -117,6 +126,13 @@ def main():
                 "arrival_rate": args.arrival_rate or 0.0}
         path = write_bench("serve_live", metrics, meta, args.bench_json)
         print(f"[serve] wrote {path}")
+
+    if observer is not None:
+        trace_path = observer.close()
+        if trace_path:
+            print(f"[obs] wrote trace {trace_path}")
+        if args.metrics_out:
+            print(f"[obs] wrote metrics {args.metrics_out}")
 
 
 if __name__ == "__main__":

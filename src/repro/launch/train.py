@@ -74,6 +74,12 @@ def main():
     ap.add_argument("--bench-json", default=None, metavar="DIR",
                     help="measure throughput and write "
                          "BENCH_train_throughput.json into DIR")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace of the run "
+                         "(step spans, recal events, hwmon gauges) to PATH")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append obs metrics rows (JSONL) to PATH; render "
+                         "with python -m repro.obs.summarize")
     args = ap.parse_args()
     if args.power_budget_w is not None and not args.autotune:
         ap.error("--power-budget-w only steers --autotune")
@@ -97,6 +103,10 @@ def main():
         schedule_batch=args.batch if args.autotune else None,
     )
     model = session.model
+    observer = None
+    if args.trace_out or args.metrics_out:
+        observer = session.observe(metrics_path=args.metrics_out,
+                                   trace_path=args.trace_out)
     if session.mesh is not None:
         print(f"[dist] data-parallel over {session.mesh.devices.size} devices")
     if session.schedule is not None:
@@ -113,6 +123,8 @@ def main():
         print(f"[data] source={data['source']}")
         xtr, ytr = data["train"]
         xte, yte = data["test"]
+        if xtr.shape[1] != model.in_dim:  # --smoke shrinks in_dim
+            xtr, xte = xtr[:, :model.in_dim], xte[:, :model.in_dim]
         pipe = pipeline.ArrayClassification(xtr, ytr, args.batch, args.seed)
         state, _ = session.fit(pipe.batch, total_steps=args.steps, timer=timer)
         _report_bench(args, session, state, pipe.batch(0), timer)
@@ -142,6 +154,16 @@ def main():
         state, metrics = session.fit(batch_fn, total_steps=args.steps, timer=timer)
         _report_bench(args, session, state, batch_fn(0), timer)
         print(f"[final] {({k: float(v) for k, v in metrics.items()})}")
+
+    if observer is not None:
+        trace_path = observer.close()
+        if trace_path:
+            print(f"[obs] wrote trace {trace_path}")
+        if args.metrics_out:
+            print(f"[obs] wrote metrics {args.metrics_out}")
+        if observer.alerts:
+            print(f"[obs] {len(observer.alerts)} hardware alert(s); first: "
+                  f"{observer.alerts[0].message}")
 
 
 def _report_bench(args, session, state, batch, timer):

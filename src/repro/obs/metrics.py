@@ -1,0 +1,206 @@
+"""Lightweight metrics: counters, gauges, histograms, pluggable sinks.
+
+The registry is the host-side half of a jit-safe metrics pipeline.  The
+contract with jitted code (``train.Trainer._train_step``, the serve
+engine's jitted phases) is: metrics computed on device are *returned* from
+the step as arrays in a dict — never read inside the step — and the fit
+loop drains the whole dict with ONE batched ``jax.device_get`` per logging
+interval (``Registry.record``), so observability costs one host sync per
+interval instead of one per scalar (the seed's ``{k: float(v)}`` pattern).
+
+Sinks receive one row per ``record``/``emit`` call::
+
+    {"t": <unix seconds>, "step": <int | None>, "metrics": {name: float}}
+
+* ``MemorySink`` — bounded ring (introspection, tests, live dashboards)
+* ``JsonlSink``  — one JSON object per line; ``repro.obs.summarize``
+  renders the file back into bench-style tables
+
+Histograms keep a bounded sample window and compute linear-interpolation
+percentiles (the numpy default — tests cross-check against
+``np.percentile``).
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import math
+import os
+import time
+
+
+class Counter:
+    """Monotonic event count."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-value-wins scalar."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = float("nan")
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Bounded sample window with numpy-compatible percentiles."""
+
+    __slots__ = ("name", "values")
+
+    def __init__(self, name: str, window: int = 8192):
+        self.name = name
+        self.values: collections.deque = collections.deque(maxlen=window)
+
+    def observe(self, v: float) -> None:
+        self.values.append(float(v))
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+    def percentile(self, q: float) -> float:
+        """Linear-interpolation percentile (numpy's default method).
+        ``q`` in [0, 100]."""
+        if not self.values:
+            raise ValueError(f"histogram {self.name!r} is empty")
+        srt = sorted(self.values)
+        rank = (q / 100.0) * (len(srt) - 1)
+        lo = math.floor(rank)
+        hi = math.ceil(rank)
+        if lo == hi:
+            return srt[int(rank)]
+        frac = rank - lo
+        return srt[lo] * (1.0 - frac) + srt[hi] * frac
+
+    def summary(self) -> dict:
+        srt = sorted(self.values)
+        n = len(srt)
+        return {
+            "count": float(n),
+            "mean": sum(srt) / n if n else float("nan"),
+            "p50": self.percentile(50) if n else float("nan"),
+            "p99": self.percentile(99) if n else float("nan"),
+            "min": srt[0] if n else float("nan"),
+            "max": srt[-1] if n else float("nan"),
+        }
+
+
+class MemorySink:
+    """In-memory ring of the last ``capacity`` rows."""
+
+    def __init__(self, capacity: int = 4096):
+        self.rows: collections.deque = collections.deque(maxlen=capacity)
+
+    def write(self, row: dict) -> None:
+        self.rows.append(row)
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """Append-only JSONL file, one row per line (crash-safe: every row is
+    flushed, so a killed run keeps everything logged so far)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._f = open(path, "a")
+
+    def write(self, row: dict) -> None:
+        self._f.write(json.dumps(row) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class Registry:
+    """Named counters/gauges/histograms plus the sink fan-out."""
+
+    def __init__(self, sinks: list | None = None):
+        self.sinks = list(sinks or [])
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._hists: dict[str, Histogram] = {}
+
+    # ---- instruments ----
+    def counter(self, name: str) -> Counter:
+        if name not in self._counters:
+            self._counters[name] = Counter(name)
+        return self._counters[name]
+
+    def gauge(self, name: str) -> Gauge:
+        if name not in self._gauges:
+            self._gauges[name] = Gauge(name)
+        return self._gauges[name]
+
+    def histogram(self, name: str, window: int = 8192) -> Histogram:
+        if name not in self._hists:
+            self._hists[name] = Histogram(name, window)
+        return self._hists[name]
+
+    # ---- the batched drain ----
+    @staticmethod
+    def drain(scalars) -> dict:
+        """Device metrics dict -> host float dict in ONE batched transfer.
+
+        ``scalars`` may hold jax arrays (drained with a single
+        ``jax.device_get`` over the whole dict) or plain host numbers.
+        """
+        needs_get = any(hasattr(v, "device") or hasattr(v, "devices")
+                        for v in scalars.values())
+        if needs_get:
+            import jax
+
+            scalars = jax.device_get(dict(scalars))
+        return {k: float(v) for k, v in scalars.items()}
+
+    def record(self, step, scalars) -> dict:
+        """Drain one logging interval's device metrics in a single batched
+        transfer and fan the host floats out to gauges + sinks."""
+        host = self.drain(scalars)
+        for k, v in host.items():
+            self.gauge(k).set(v)
+        self.emit(step, host)
+        return host
+
+    def emit(self, step, metrics: dict) -> None:
+        """Write one already-host-side row to every sink."""
+        row = {"t": time.time(), "step": None if step is None else int(step),
+               "metrics": dict(metrics)}
+        for sink in self.sinks:
+            sink.write(row)
+
+    # ---- snapshot / teardown ----
+    def snapshot(self) -> dict:
+        """Flat view of every instrument's current value (histograms as
+        their summary stats)."""
+        out = {}
+        for c in self._counters.values():
+            out[c.name] = c.value
+        for g in self._gauges.values():
+            out[g.name] = g.value
+        for h in self._hists.values():
+            for stat, v in h.summary().items():
+                out[f"{h.name}_{stat}"] = v
+        return out
+
+    def close(self) -> None:
+        for sink in self.sinks:
+            sink.close()

@@ -1,0 +1,101 @@
+"""Render an obs metrics JSONL file as a table (and optionally a
+BENCH-style report).
+
+  PYTHONPATH=src python -m repro.obs.summarize run-metrics.jsonl
+  PYTHONPATH=src python -m repro.obs.summarize run-metrics.jsonl \
+      --bench-json bench-out       # writes BENCH_obs_summary.json
+
+The input is what ``obs.metrics.JsonlSink`` wrote: one JSON object per
+line, ``{"t": unix, "step": int|null, "metrics": {name: value}}``.  Every
+metric is aggregated over the file (count / mean / p50 / p99 / min / max
+/ last) with the same linear-interpolation percentiles the registry's
+histograms use.  ``--bench-json`` serializes the aggregate through
+``repro.bench.write_bench`` — the exact schema CI validates for every
+other BENCH_*.json — so a metrics log can join the perf trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+from repro.obs.metrics import Histogram
+
+
+def read_rows(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def aggregate(rows: list[dict]) -> dict[str, dict]:
+    """metric name -> {count, mean, p50, p99, min, max, last} over the
+    file, insertion-ordered by first appearance."""
+    hists: dict[str, Histogram] = {}
+    last: dict[str, float] = {}
+    for row in rows:
+        for name, v in row.get("metrics", {}).items():
+            v = float(v)
+            if not math.isfinite(v):
+                continue
+            if name not in hists:
+                hists[name] = Histogram(name, window=1 << 20)
+            hists[name].observe(v)
+            last[name] = v
+    out = {}
+    for name, h in hists.items():
+        s = h.summary()
+        s["last"] = last[name]
+        out[name] = s
+    return out
+
+
+def render(table: dict[str, dict], steps: int, out=print) -> None:
+    cols = ("count", "mean", "p50", "p99", "min", "max", "last")
+    width = max((len(n) for n in table), default=6)
+    out(f"{'metric':<{width}}  " + "  ".join(f"{c:>12}" for c in cols))
+    for name, stats in table.items():
+        cells = []
+        for c in cols:
+            v = stats[c]
+            cells.append(f"{int(v):>12d}" if c == "count"
+                         else f"{v:>12.6g}")
+        out(f"{name:<{width}}  " + "  ".join(cells))
+    out(f"({steps} logged rows)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="metrics JSONL written by obs.JsonlSink")
+    ap.add_argument("--bench-json", default=None, metavar="DIR",
+                    help="also write the aggregate as "
+                         "BENCH_obs_summary.json to DIR")
+    args = ap.parse_args(argv)
+
+    rows = read_rows(args.path)
+    if not rows:
+        print(f"{args.path}: no metric rows")
+        return 1
+    table = aggregate(rows)
+    render(table, len(rows))
+    if args.bench_json:
+        from repro.bench import write_bench
+
+        flat = {}
+        for name, stats in table.items():
+            for stat in ("mean", "p50", "p99", "last"):
+                flat[f"{name}_{stat}"] = stats[stat]
+        path = write_bench("obs_summary", flat,
+                           meta={"source": args.path, "rows": len(rows)},
+                           out_dir=args.bench_json)
+        print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.serve.decode import make_prefill_step, make_serve_step, select_slots
 
 QUEUED = "QUEUED"
@@ -94,14 +95,27 @@ class Engine:
     hw_state : drift-state pytree | None
         In-situ MRR drift/calibration state threaded through the jit'd
         steps; defaults to pristine state for stateful backends.
+    observer : repro.obs.Observer | None
+        When given (or ``True``), every request gets one async trace
+        track (QUEUED → PREFILL → DECODE → DONE with a FIRST_TOKEN
+        instant), each prefill/decode tick a span, and slot occupancy /
+        queue depth a counter series.  ``None`` resolves to the shared
+        null observer — the engine pays a few attribute lookups.
     """
 
     def __init__(self, model, params, *, batch_slots: int = 8, max_len: int = 512,
                  eos_id: int | None = None, prefill_chunk: int = 16,
                  backend: str | None = None, photonics=None, hw_state=None,
-                 seed: int = 0):
+                 seed: int = 0, observer=None):
         self.model = model
         self.params = params
+        self.observer = obs_lib.resolve(observer)
+        self._req_seq = 0
+        self._track_ids: dict[int, int] = {}  # id(request) -> async track id
+        if self.observer.enabled:
+            from repro.obs.trace import HOST_PID, HOST_TID
+
+            self.observer.trace.name_thread(HOST_PID, HOST_TID, "serve.Engine")
         self.slots = batch_slots
         self.max_len = max_len
         self.eos = eos_id
@@ -197,12 +211,26 @@ class Engine:
         req.state = QUEUED
         req.submit_s = time.monotonic()
         self._pending.append(req)
+        if self.observer.enabled:
+            rid = self._req_seq
+            self._req_seq += 1
+            self._track_ids[id(req)] = rid
+            tr = self.observer.trace
+            tr.async_begin(f"request-{rid}", rid, cat="serve",
+                           prompt_len=len(req.prompt), max_new=req.max_new)
+            tr.async_begin(QUEUED, rid, cat="serve")
 
     def _admit(self):
         for i in range(self.slots):
             if self._requests[i] is None and self._pending:
                 req = self._pending.pop(0)
                 req.state = PREFILL
+                if self.observer.enabled:
+                    rid = self._track_ids.get(id(req))
+                    if rid is not None:
+                        tr = self.observer.trace
+                        tr.async_end(QUEUED, rid, cat="serve")
+                        tr.async_begin(PREFILL, rid, cat="serve", slot=i)
                 self._requests[i] = req
                 self._prompt_pos[i] = 0
                 self._cache_len[i] = 0
@@ -213,6 +241,13 @@ class Engine:
 
     def _finish(self, i: int):
         req = self._requests[i]
+        if self.observer.enabled:
+            rid = self._track_ids.pop(id(req), None)
+            if rid is not None:
+                tr = self.observer.trace
+                tr.async_end(req.state, rid, cat="serve")
+                tr.async_end(f"request-{rid}", rid, cat="serve",
+                             new_tokens=len(req.out))
         req.state = DONE
         req.finish_s = time.monotonic()
         self._requests[i] = None
@@ -238,10 +273,13 @@ class Engine:
             take = min(c, len(req.prompt) - pos)
             chunk[i, :take] = req.prompt[pos:pos + take]
             n_valid[i] = take
-        last, self.caches, _ = self._prefill(
-            self.params, jnp.asarray(chunk), jnp.asarray(n_valid), self.caches,
-            jnp.asarray(self._cache_len.astype(np.int32)),
-            self._next_key(), self.hw_state)
+        with self.observer.span("prefill_tick", cat="serve", slots=len(slots),
+                                tokens=int(n_valid.sum())):
+            last, self.caches, _ = self._prefill(
+                self.params, jnp.asarray(chunk), jnp.asarray(n_valid),
+                self.caches,
+                jnp.asarray(self._cache_len.astype(np.int32)),
+                self._next_key(), self.hw_state)
         self.stats["prefill_steps"] += 1
         self.stats["prefill_tokens"] += int(n_valid.sum())
         self._cache_len[slots] += n_valid[slots]
@@ -258,6 +296,14 @@ class Engine:
                 req.out.append(tok)
                 req.first_token_s = now
                 req.state = DECODE
+                if self.observer.enabled:
+                    rid = self._track_ids.get(id(req))
+                    if rid is not None:
+                        tr = self.observer.trace
+                        tr.async_end(PREFILL, rid, cat="serve")
+                        tr.async_instant("FIRST_TOKEN", rid, cat="serve",
+                                         token=tok)
+                        tr.async_begin(DECODE, rid, cat="serve")
                 self._tokens[i, 0] = tok
                 if ((self.eos is not None and tok == self.eos)
                         or len(req.out) >= req.max_new
@@ -272,10 +318,12 @@ class Engine:
             return False
         active = np.zeros((self.slots,), bool)
         active[slots] = True
-        nxt, _, self.caches = self._decode(
-            self.params, jnp.asarray(self._tokens), self.caches,
-            jnp.asarray(self._cache_len.astype(np.int32)), jnp.asarray(active),
-            self._next_key(), self.hw_state)
+        with self.observer.span("decode_tick", cat="serve", slots=len(slots)):
+            nxt, _, self.caches = self._decode(
+                self.params, jnp.asarray(self._tokens), self.caches,
+                jnp.asarray(self._cache_len.astype(np.int32)),
+                jnp.asarray(active),
+                self._next_key(), self.hw_state)
         nxt = np.asarray(nxt)
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += len(slots)
@@ -298,6 +346,10 @@ class Engine:
         self._admit()
         did_prefill = self._prefill_tick()
         did_decode = self._decode_tick()
+        if self.observer.enabled:
+            self.observer.counter("engine", {
+                "active_slots": sum(r is not None for r in self._requests),
+                "queued": len(self._pending)})
         if did_prefill or did_decode:
             self.stats["ticks"] += 1
             return True

@@ -209,7 +209,8 @@ def simulate(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
              f_s: float | None = None, tiling: str = "panel",
              include_weight_update: bool = True,
              digital_s: float = 0.0,
-             recalibrate_every: int = 0) -> PipelineReport:
+             recalibrate_every: int = 0,
+             trace=None) -> PipelineReport:
     """Replay one training step's panel schedule as per-bus event
     timelines; see the module docstring for the event model.
 
@@ -219,7 +220,11 @@ def simulate(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
     (feed it from ``BENCH_emu_kernel``'s fused-step measurement).
     ``recalibrate_every`` > 0 amortises one in-situ recalibration heater
     sweep (``st.heater``) over that many steps as a per-step epilogue —
-    the sim-time cost the autotuner weighs against drift accuracy."""
+    the sim-time cost the autotuner weighs against drift accuracy.
+
+    ``trace`` exports the event timeline as Chrome-trace tracks (one per
+    bus × stage, viewable in Perfetto): pass an ``obs.TraceRecorder`` to
+    accumulate into, or a path to write a standalone trace JSON."""
     if not workload:
         raise ValueError("empty workload")
     st = components.stage_times(pcfg, f_s=f_s)
@@ -278,7 +283,7 @@ def simulate(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
     energy_j = power * wall
     occupancy = {s: (b / (n_alive * wall) if wall > 0 else 0.0)
                  for s, b in stage_busy.items()}
-    return PipelineReport(
+    report = PipelineReport(
         wall_clock_s=wall,
         compute_s=compute_s,
         weight_update_s=weight_update_s,
@@ -302,3 +307,11 @@ def simulate(workload, pcfg: photonics.PhotonicConfig, ecfg=None, *,
         recal_s=recal_s,
         recalibrate_every=recalibrate_every,
     )
+    if trace is not None:
+        from repro.obs import export  # lazy: obs is optional at sim time
+
+        rec, path = export.resolve_recorder(trace)
+        export.pipeline_to_trace(report, rec)
+        if path is not None:
+            export.write(rec, path)
+    return report

@@ -99,6 +99,7 @@ class _Active:
     decode_left: int
     admit_s: float
     first_token_s: float | None = None
+    record: dict | None = None  # trace-export lifecycle record (trace= only)
 
 
 @dataclasses.dataclass
@@ -142,7 +143,8 @@ class ServingReport:
 
 
 def simulate_serving(requests, svc: ServiceModel, *, batch_slots: int = 8,
-                     prefill_chunk: int = 16) -> ServingReport:
+                     prefill_chunk: int = 16,
+                     trace=None) -> ServingReport:
     """Replay the engine's tick loop over simulated time.
 
     Each tick: admit arrived requests into free slots, run one chunked
@@ -153,6 +155,11 @@ def simulate_serving(requests, svc: ServiceModel, *, batch_slots: int = 8,
     ``decode_len - 1`` tokens come one per decode round.  When the pool
     is idle, time jumps to the next arrival — queueing delay is the
     arrival→slot wait when it is not.
+
+    ``trace`` exports the simulated timeline as Chrome-trace tracks
+    (round spans + one async lifecycle track per request): pass an
+    ``obs.TraceRecorder`` to accumulate into, or a path to write a
+    standalone trace JSON.  ``None`` (the default) collects nothing.
     """
     if batch_slots < 1:
         raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
@@ -172,11 +179,17 @@ def simulate_serving(requests, svc: ServiceModel, *, batch_slots: int = 8,
     prefill_tokens = 0
     decode_tokens = 0
     ttft, latency, queue = [], [], []
+    collect = trace is not None
+    round_ev: list = []  # (kind, start_s, end_s, tokens, n_slots)
+    req_ev: list = []  # lifecycle records for export.serving_to_trace
 
     def finish(s: _Active, now: float):
         latency.append(now - s.spec.arrival_s)
         ttft.append(s.first_token_s - s.spec.arrival_s)
         queue.append(s.admit_s - s.spec.arrival_s)
+        if s.record is not None:
+            s.record["first_token_s"] = s.first_token_s
+            s.record["finish_s"] = now
         slots.remove(s)
 
     while idx < n or slots:
@@ -185,13 +198,22 @@ def simulate_serving(requests, svc: ServiceModel, *, batch_slots: int = 8,
         while idx < n and pending[idx].arrival_s <= t and len(slots) < batch_slots:
             r = pending[idx]
             idx += 1
+            rec = None
+            if collect:
+                rec = {"id": len(req_ev), "arrival_s": r.arrival_s,
+                       "admit_s": t, "first_token_s": None, "finish_s": t,
+                       "prompt_len": r.prompt_len, "decode_len": r.decode_len}
+                req_ev.append(rec)
             slots.append(_Active(spec=r, prompt_left=r.prompt_len,
-                                 decode_left=r.decode_len, admit_s=t))
+                                 decode_left=r.decode_len, admit_s=t,
+                                 record=rec))
         # --- prefill round ---
         pf = [s for s in slots if s.prompt_left > 0]
         if pf:
             tok = sum(min(prefill_chunk, s.prompt_left) for s in pf)
             dur = svc.round_s(tok)
+            if collect:
+                round_ev.append(("prefill", t, t + dur, tok, len(pf)))
             t += dur
             busy_s += dur
             rounds += 1
@@ -209,6 +231,8 @@ def simulate_serving(requests, svc: ServiceModel, *, batch_slots: int = 8,
         dc = [s for s in slots if s.prompt_left == 0]
         if dc:
             dur = svc.round_s(len(dc))
+            if collect:
+                round_ev.append(("decode", t, t + dur, len(dc), len(dc)))
             t += dur
             busy_s += dur
             rounds += 1
@@ -219,6 +243,13 @@ def simulate_serving(requests, svc: ServiceModel, *, batch_slots: int = 8,
                     finish(s, t)
 
     makespan = t
+    if collect:
+        from repro.obs import export  # lazy: obs is optional at sim time
+
+        rec_, path = export.resolve_recorder(trace)
+        export.serving_to_trace(round_ev, req_ev, rec_)
+        if path is not None:
+            export.write(rec_, path)
     useful_macs = svc.macs_per_token * (prefill_tokens + decode_tokens)
     energy = svc.power_w * makespan
     last_arrival = max(pending[-1].arrival_s, 1e-12)

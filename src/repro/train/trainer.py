@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import algos
+from repro import obs as obs_lib
 from repro.algos.dfa import DFAConfig
 from repro.core import photonics
 from repro.data.pipeline import DevicePrefetcher
@@ -117,6 +118,7 @@ class Trainer:
         self._fit_step_fn = jax.jit(self._train_step, donate_argnums=(0,))
         self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.keep_ckpts) if cfg.ckpt_dir else None
         self._log_file = None
+        self._log_keys = None
 
     def _mesh_ctx(self):
         if self.mesh is None:
@@ -190,9 +192,17 @@ class Trainer:
                      "step": state["step"] + 1}
         if hw is not None:
             new_state["hw"] = hw
+            resid = hw_drift.residual(hw)
             metrics["hw_drift_rms"] = jnp.sqrt(jnp.mean(jnp.square(hw["drift"])))
-            metrics["hw_residual_rms"] = jnp.sqrt(
-                jnp.mean(jnp.square(hw_drift.residual(hw))))
+            metrics["hw_residual_rms"] = jnp.sqrt(jnp.mean(jnp.square(resid)))
+            device = self.cfg.dfa.photonics.mrr
+            if device is not None and device.drift_sigma > 0:
+                # rings whose uncompensated detuning left the usable range —
+                # the hwmon dead-ring gauge, computed on device so the host
+                # never touches the full (n_buses, rows, cols) grid
+                thresh = obs_lib.hwmon.DEAD_RING_FACTOR * device.drift_sigma
+                metrics["hw_dead_rings"] = jnp.sum(
+                    jnp.abs(resid) > thresh).astype(jnp.float32)
         return new_state, metrics
 
     def _dispatch(self, state, batch, step_fn):
@@ -236,18 +246,22 @@ class Trainer:
                 return restored, int(step)
         return state, 0
 
-    def _log(self, step, metrics):
+    def _log(self, step, row):
+        """Append one CSV row of already-host-side floats (the fit loop
+        drains device metrics with one batched ``jax.device_get`` before
+        calling this — never one blocking transfer per scalar)."""
         if self.cfg.log_path is None:
             return
-        row = {k: float(v) for k, v in metrics.items()}
         if self._log_file is None:
             os.makedirs(os.path.dirname(os.path.abspath(self.cfg.log_path)), exist_ok=True)
             new = not os.path.exists(self.cfg.log_path)
             self._log_file = open(self.cfg.log_path, "a")
+            self._log_keys = sorted(row)
             if new:
-                self._log_file.write("step," + ",".join(sorted(row)) + "\n")
+                self._log_file.write("step," + ",".join(self._log_keys) + "\n")
         self._log_file.write(
-            f"{step}," + ",".join(str(row[k]) for k in sorted(row)) + "\n")
+            f"{step}," + ",".join(str(row.get(k, "nan"))
+                                  for k in self._log_keys) + "\n")
         self._log_file.flush()
 
     def _make_feed(self, data_fn, total_steps: int):
@@ -263,18 +277,27 @@ class Trainer:
                                 limit=total_steps)
 
     def fit(self, data_fn, total_steps: int, eval_fn=None, verbose=True,
-            timer=None):
+            timer=None, observer=None):
         """data_fn(step) -> batch (deterministic — restart-safe).
 
         ``timer`` is an optional repro.bench.StepTimer; when given, each
         step is synced (block_until_ready) and its wall time recorded —
         bench-only, since the sync serializes dispatch.
+
+        ``observer`` is an optional ``repro.obs.Observer``: every step
+        gets a dispatch span, recalibration steps an instant event, and
+        each logging interval drains the device metrics through
+        ``observer.log_step`` (one batched ``jax.device_get``, hwmon
+        gauges + drift-budget alerts included).  ``None`` resolves to the
+        shared null observer — a constant-cost no-op path.
         """
+        observer = obs_lib.resolve(observer)
         state, start = self.restore_or_init()
         if self.mesh is not None:
             state = sharding.replicate(self.mesh, state)
         feed = self._make_feed(data_fn, total_steps)
         metrics = {}
+        recal = self.cfg.recalibrate_every if self._hw_stateful else 0
         if timer is not None:
             timer.start()
         for step in range(start, total_steps):
@@ -283,14 +306,34 @@ class Trainer:
                 leaves = jax.tree_util.tree_leaves(batch)
                 if leaves and getattr(leaves[0], "ndim", 0) >= 1:
                     timer.examples_per_step = int(leaves[0].shape[0])
-            state, metrics = self._dispatch(state, batch, self._fit_step_fn)
+            if observer.enabled:
+                # the span covers dispatch (async under jit — device time
+                # shows up in the logging-interval drain span instead)
+                with observer.span("step", step=step,
+                                   microbatches=self.cfg.microbatches):
+                    state, metrics = self._dispatch(state, batch,
+                                                    self._fit_step_fn)
+                if recal > 0 and step > 0 and step % recal == 0:
+                    # mirrors hw_calibrate.advance's cadence inside the step
+                    observer.event("recalibration", cat="hwmon", step=step)
+            else:
+                state, metrics = self._dispatch(state, batch,
+                                                self._fit_step_fn)
             if timer is not None:
                 timer.tick(state["step"])
             if (step + 1) % self.cfg.log_every == 0 or step + 1 == total_steps:
-                m = {k: float(v) for k, v in metrics.items()}
-                self._log(step + 1, metrics)
+                if observer.enabled:
+                    with observer.span("drain", step=step + 1):
+                        host = observer.log_step(step + 1, metrics)
+                else:
+                    # one batched transfer for the whole dict — never one
+                    # blocking float() per metric
+                    host = {k: float(v) for k, v in
+                            jax.device_get(dict(metrics)).items()}
+                self._log(step + 1, host)
                 if verbose:
-                    txt = " ".join(f"{k}={v:.4f}" for k, v in sorted(m.items()))
+                    txt = " ".join(f"{k}={v:.4f}"
+                                   for k, v in sorted(host.items()))
                     print(f"[step {step + 1}/{total_steps}] {txt}", flush=True)
             if self.ckpt is not None and (step + 1) % self.cfg.ckpt_every == 0:
                 self.ckpt.save(step + 1, state)
