@@ -175,7 +175,8 @@ class Session:
                       photonics=hw_cfg if backend is not None else None,
                       hw_state=hw_state, seed=seed,
                       observer=observer if observer is not None
-                      else self.observer)
+                      else self.observer,
+                      debug_checks=self.config.debug_checks)
 
 
 def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
@@ -196,12 +197,18 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
                   ckpt_every: int = 500, log_every: int = 50,
                   log_path: str | None = None,
                   step_deadline_s: float | None = None,
-                  observe=False) -> Session:
+                  observe=False, debug_checks: bool = False) -> Session:
     """Compose one cell of the algorithm × hardware × backend matrix.
 
     ``observe``: ``False`` (default) runs without observability; ``True``
     attaches a session-wired ``obs.Observer`` (hardware monitor on
     stateful-hw backends); an ``Observer`` instance is taken as given.
+
+    ``debug_checks``: opt into the ``repro.lint.runtime`` sanitizers — the
+    train step (and any ``session.engine()``) runs under
+    ``jax.experimental.checkify`` (NaN/Inf, div-by-zero, plus the emu
+    channel's explicit finiteness checks) and a recompilation sentinel
+    raises ``lint.RecompileError`` if a hot path retraces after warmup.
     """
     model = build_model(arch, smoke=smoke, dtype=dtype)
     algorithm = algos.get(algo)             # fail fast on unknown names
@@ -296,6 +303,7 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
         ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
         log_every=log_every, log_path=log_path,
         step_deadline_s=step_deadline_s,
+        debug_checks=debug_checks,
     )
     session = Session(model=model, algorithm=algorithm,
                       trainer=Trainer(model, cfg), schedule=tuned)

@@ -42,6 +42,8 @@ import jax.numpy as jnp
 
 from repro.dist.sharding import annotate
 from repro.hardware.mrr import MRRConfig
+from repro.lint.runtime import check_finite
+from repro.utils import prng
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,12 +227,13 @@ def photonic_matmul(a, b, cfg: PhotonicConfig, key=None, *, mask=None):
         if key is None:
             raise ValueError("noise_std > 0 requires a PRNG key")
         sigma = noise_sigma_total(a.shape[-1], 1.0, 1.0, cfg)  # normalised units
-        noise = jax.random.normal(key, out.shape, dtype=out.dtype)
+        noise = jax.random.normal(prng.consume(key), out.shape,
+                                  dtype=out.dtype)
         if out.ndim == 2:
             noise = annotate(noise, "delta_tm")
             out = annotate(out, "delta_tm")
         out = out + sigma * noise
-    out = out * (s_a * s_b)
+    out = check_finite(out * (s_a * s_b), "photonic_matmul output")
     return out * mask if mask is not None else out
 
 

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.hardware import drift as drift_lib
 from repro.hardware import mrr
+from repro.utils import prng
 
 
 def quantize_command(delta_cmd, cfg: mrr.MRRConfig):
@@ -71,8 +72,8 @@ def measure(drift, key, cfg: mrr.MRRConfig):
     noise.  With ``cal_noise=0`` calibration is perfect."""
     if cfg.cal_noise == 0.0:
         return drift
-    return drift + cfg.cal_noise * jax.random.normal(key, drift.shape,
-                                                     drift.dtype)
+    return drift + cfg.cal_noise * jax.random.normal(prng.consume(key),
+                                                     drift.shape, drift.dtype)
 
 
 def advance(state: dict, photonics_cfg, step, key,

@@ -46,6 +46,8 @@ from repro.core import photonics
 from repro.hardware import calibrate
 from repro.hardware import drift as drift_lib
 from repro.hardware import mrr
+from repro.lint.runtime import check_finite
+from repro.utils import prng
 
 
 def _pad_axis(x, mult: int, axis: int):
@@ -212,7 +214,9 @@ def bank_product(a_n, b_n, cfg, key=None, *, residual=None):
     if sigma > 0.0 or device.shot_noise > 0.0:
         if key is None:
             raise ValueError("noisy emulated bank requires a PRNG key")
-        k_th, k_sh = jax.random.split(key)
+        # final use of `key`: both physical noise sources draw from the
+        # split halves; consume() makes any later reuse a lint error
+        k_th, k_sh = jax.random.split(prng.consume(key))
         noise = jnp.zeros_like(p)
         if sigma > 0.0:
             # per-bus BPD/ADC chains: every (bus, cycle) element is an
@@ -284,6 +288,6 @@ def emulated_matmul(a, b, cfg, key=None, *, mask=None, state=None,
 
         out = emu_matmul.fused_bank_product(a_n, b_n, cfg, key,
                                             residual=residual, impl=kernel)
-    out = out * (s_a * s_b)
+    out = check_finite(out * (s_a * s_b), "emulated_matmul output")
     out = out * mask if mask is not None else out
     return out.astype(jnp.result_type(a, b))

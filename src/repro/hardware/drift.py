@@ -36,6 +36,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.utils import prng
+
 
 def init_state(cfg, key=None) -> dict:
     """Fresh hardware state for a ``PhotonicConfig``-shaped bank: a just-
@@ -53,7 +55,7 @@ def ou_step(x, key, sigma: float, tau: float):
     time ``tau`` (in steps)."""
     a = math.exp(-1.0 / max(tau, 1e-9))
     s = sigma * math.sqrt(max(1.0 - a * a, 0.0))
-    return a * x + s * jax.random.normal(key, x.shape, x.dtype)
+    return a * x + s * jax.random.normal(prng.consume(key), x.shape, x.dtype)
 
 
 def residual(state: dict):

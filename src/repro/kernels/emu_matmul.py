@@ -48,6 +48,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.lint.runtime import check_finite
+from repro.utils import prng
+
 # jax < 0.5 names it TPUCompilerParams; newer releases renamed it.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
@@ -347,7 +350,8 @@ def fused_bank_product(a_n, b_n, cfg, key=None, *, residual=None,
     if noisy:
         if key is None:
             raise ValueError("noisy emulated bank requires a PRNG key")
-        seed = jax.random.key_data(key).reshape(-1)[-2:].astype(jnp.uint32)
+        seed = (jax.random.key_data(prng.consume(key))
+                .reshape(-1)[-2:].astype(jnp.uint32))
 
     kwargs = dict(n_panels=n_panels, gamma=float(device.gamma),
                   sigma=float(sigma), shot=float(shot),
@@ -363,4 +367,4 @@ def fused_bank_product(a_n, b_n, cfg, key=None, *, residual=None,
         out = emu_bank_product_xla(a_t, delta_eff, dead_mask, **kwargs)
     else:
         raise ValueError(f"unknown fused impl {impl!r} (pallas | xla)")
-    return out[:t, :m]
+    return check_finite(out[:t, :m], f"fused_bank_product[{impl}] output")

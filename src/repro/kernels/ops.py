@@ -74,7 +74,8 @@ def photonic_matmul(a, b, cfg, key=None, *, mask=None, noise_mode="auto",
 
         nk = a_p.shape[1] // bk
         sigma_total = photonics.noise_sigma_total(k_dim, 1.0, 1.0, cfg)
-        sigma_step = float(sigma_total / math.sqrt(nk))
+        # host math on config floats, not a device sync
+        sigma_step = float(sigma_total / math.sqrt(nk))  # lint: disable=RL002
         seed = (
             jax.random.key_data(key)[-1].astype(jnp.int32)
             if key is not None

@@ -1,0 +1,103 @@
+"""``repro.lint`` — repo-specific static analysis + runtime sanitizers.
+
+The emulator's correctness rests on invariants no unit test covers
+exhaustively: disjoint counter-based PRNG streams, zero host syncs in
+jitted hot paths, stable carried-state pytree structure, frozen-config
+discipline, and donation hygiene.  This package locks them in as CI
+gates.
+
+Static rules (``python -m repro.lint src/ [tests/ benchmarks/] [--baseline
+lint-baseline.json]``):
+
+=======  ==============================================================
+RL001    PRNG key discipline — one key value feeding ≥2 random draws
+         (or unknown consumers) without an intervening split/fold_in;
+         ``utils.prng.consume(key)`` marks a key spent explicitly.
+RL002    Host sync in a hot path — ``float()`` / ``.item()`` /
+         ``np.asarray`` / ``jax.device_get`` reachable from
+         ``Trainer.fit``/``step``, ``Engine`` ticks, or any ``@jit``
+         function; in *driver* functions, per-iteration syncs in loops.
+RL003    Tracer-unsafe control flow — Python ``if``/``while`` on
+         tracer-valued tests in jit-reachable code; non-hashable
+         literals passed as static args of jitted callables.
+RL004    Frozen-config mutation and dict-mutation of carried state
+         inside traced code.
+RL005    Donation hazards — reading a buffer after passing it at a
+         ``donate_argnums`` position.
+=======  ==============================================================
+
+Suppress intentional findings in place with a trailing
+``# lint: disable=RL002`` comment; known legacy findings live in the
+committed ``lint-baseline.json`` (empty for ``src/``).
+
+Runtime layer (``repro.lint.runtime``): ``build_session(...,
+debug_checks=True)`` checkifies the train step (NaN/Inf, div-by-zero,
+OOB indexing + explicit ``check_finite`` assertions inside the emu
+channel and the fused kernel twin) and installs recompilation sentinels
+that raise if the fit step or an engine tick retraces after warmup.
+"""
+
+from __future__ import annotations
+
+from repro.lint.analysis import Project, load_project, project_from_sources
+from repro.lint.findings import (Finding, Suppressions, load_baseline,
+                                 new_findings, write_baseline)
+from repro.lint.hotpath import jit_reachable, run_rl002, run_rl003
+from repro.lint.rules import run_rl001, run_rl004, run_rl005
+
+ALL_RULES = ("RL001", "RL002", "RL003", "RL004", "RL005")
+
+# the static analyzer is stdlib-only (CI runs it without installing jax);
+# the runtime sanitizers need jax + checkify, so they resolve lazily
+_RUNTIME_NAMES = ("runtime", "RecompileError", "RecompileSentinel",
+                  "check_finite", "checked", "debug_checks", "instrument")
+
+
+def __getattr__(name):
+    if name in _RUNTIME_NAMES:
+        from repro.lint import runtime
+        return runtime if name == "runtime" else getattr(runtime, name)
+    raise AttributeError(f"module 'repro.lint' has no attribute {name!r}")
+
+
+def run_rules(proj: Project, rules=ALL_RULES) -> tuple[list[Finding], int]:
+    """All findings for a project, minus inline suppressions.
+
+    Returns ``(findings, n_suppressed)``; findings are sorted by
+    (path, line, rule).
+    """
+    reachable = jit_reachable(proj)
+    raw: list[Finding] = []
+    if "RL001" in rules:
+        raw += run_rl001(proj)
+    if "RL002" in rules:
+        raw += run_rl002(proj, reachable)
+    if "RL003" in rules:
+        raw += run_rl003(proj, reachable)
+    if "RL004" in rules:
+        raw += run_rl004(proj, reachable)
+    if "RL005" in rules:
+        raw += run_rl005(proj)
+    sups = {path: Suppressions(mod.lines) for path, mod in proj.modules.items()}
+    kept, suppressed = [], 0
+    for f in raw:
+        s = sups.get(f.path)
+        lines = (f.line, f.line + 1)
+        if s is not None and s.covers(f.rule, *lines):
+            suppressed += 1
+        else:
+            kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept, suppressed
+
+
+def lint_paths(paths, rules=ALL_RULES) -> tuple[list[Finding], int]:
+    """Lint files/directories -> (findings, n_suppressed)."""
+    return run_rules(load_project(list(paths)), rules)
+
+
+def lint_source(source: str, path: str = "fixture.py",
+                rules=ALL_RULES) -> list[Finding]:
+    """Lint one in-memory module (test fixtures)."""
+    findings, _ = run_rules(project_from_sources({path: source}), rules)
+    return findings

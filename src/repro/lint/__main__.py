@@ -1,0 +1,73 @@
+"""CLI: ``python -m repro.lint [paths...] [--baseline lint-baseline.json]``.
+
+Exit status is 0 when every finding is accounted for by an inline
+suppression or the baseline, 1 when NEW findings exist (CI gate), 2 on
+usage errors.  ``--write-baseline`` rewrites the baseline from the
+current findings (for adopting the linter on a tree with legacy debt —
+the committed baseline for this repo's ``src/`` is empty and should
+stay that way: fix or suppress-with-comment instead).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro import lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="JAX-aware static analysis for the photonic "
+                    "training/serving stack (rules RL001-RL005)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src/)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON; only NEW findings fail the run")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite --baseline from the current findings")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset (e.g. RL001,RL002)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    args = ap.parse_args(argv)
+
+    rules = lint.ALL_RULES
+    if args.rules:
+        rules = tuple(r.strip().upper() for r in args.rules.split(","))
+        unknown = set(rules) - set(lint.ALL_RULES)
+        if unknown:
+            ap.error(f"unknown rules: {sorted(unknown)}")
+
+    paths = args.paths or ["src"]
+    findings, suppressed = lint.lint_paths(paths, rules)
+
+    if args.write_baseline:
+        if not args.baseline:
+            ap.error("--write-baseline requires --baseline PATH")
+        lint.write_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = lint.load_baseline(args.baseline)
+    fresh = lint.new_findings(findings, baseline)
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [vars(f) for f in fresh],
+            "baselined": len(findings) - len(fresh),
+            "suppressed": suppressed,
+        }, indent=2))
+    else:
+        for f in fresh:
+            print(f.render())
+        print(f"repro.lint: {len(fresh)} new finding(s), "
+              f"{len(findings) - len(fresh)} baselined, "
+              f"{suppressed} suppressed inline "
+              f"({', '.join(rules)} over {', '.join(paths)})")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

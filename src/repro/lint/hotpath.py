@@ -1,0 +1,206 @@
+"""Call-graph rules: RL002 (host syncs in hot paths) and RL003
+(tracer-unsafe control flow, non-hashable static args).
+
+Reachability is computed once and shared.  Roots are:
+
+* every jit-traced function (``analysis.Project.jit_roots`` — decorated,
+  assigned through ``jax.jit``, or force-marked ``# lint: jit-root``);
+* ``Trainer.fit``/``Trainer.step`` and ``Engine`` tick methods by name —
+  the training loop and the serving scheduler are hot paths even though
+  they themselves run host-side Python.
+
+RL002 distinguishes two severities:
+
+* inside the jit-reachable set, ANY host sync flags (``float()``,
+  ``.item()``, ``np.asarray``, ``jax.device_get``): one stray scalar
+  pull serializes the dispatch pipeline every step;
+* in *driver* functions — not jit-reachable themselves but directly
+  invoking jitted callables or ``.fit``/``.step``/``.tick`` methods —
+  only syncs inside ``for``/``while`` loops flag.  A single read after a
+  run is how results leave the device; one per iteration is the classic
+  accidental-serialization bug in benchmark timing loops.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.lint.analysis import Func, Module, Project
+from repro.lint.findings import Finding
+from repro.lint.rules import _src, self_or_local_jit_info
+
+# attribute calls that drive jitted work from host loops
+_DRIVER_ATTRS = {"fit", "step", "tick"}
+
+# jnp/lax predicates that are static at trace time — an `if` on these is
+# fine (shape/dtype reflection, not tracer values)
+_STATIC_PREDICATES = {
+    "issubdtype", "result_type", "dtype", "ndim", "shape", "iinfo", "finfo",
+    "isdtype",
+}
+_TRACER_NAMESPACES = ("jax.numpy.", "jax.lax.", "jax.random.", "jax.nn.")
+
+
+def jit_reachable(proj: Project) -> dict[Func, tuple[str, ...]]:
+    """Func -> call chain from its nearest root (roots map to themselves)."""
+    roots: list[Func] = list(proj.jit_roots)
+    for mod in proj.modules.values():
+        for fn in mod.funcs:
+            if fn.cls == "Trainer" and fn.name in ("fit", "step"):
+                roots.append(fn)
+            elif fn.cls == "Engine" and ("tick" in fn.name or fn.name == "step"):
+                roots.append(fn)
+    seen: dict[Func, tuple[str, ...]] = {}
+    stack = [(fn, (fn.display,)) for fn in roots]
+    while stack:
+        fn, chain = stack.pop()
+        if fn in seen or len(chain) > 12:
+            continue
+        seen[fn] = chain
+        mod = fn.module
+        for call in [n for n in ast.walk(fn.node) if isinstance(n, ast.Call)]:
+            for callee in proj.resolve_call(mod, fn, call):
+                if callee not in seen:
+                    stack.append((callee, chain + (callee.display,)))
+    return seen
+
+
+def _sync_kind(mod: Module, call: ast.Call) -> str | None:
+    func = call.func
+    if isinstance(func, ast.Attribute) and func.attr == "item" and not call.args:
+        return ".item()"
+    qual = mod.dotted(func) or ""
+    if qual == "jax.device_get":
+        return "jax.device_get"
+    if qual in ("numpy.asarray", "numpy.array"):
+        return f"np.{qual.rsplit('.', 1)[-1]}"
+    if (isinstance(func, ast.Name) and func.id == "float" and call.args
+            and not isinstance(call.args[0], ast.Constant)):
+        return "float()"
+    return None
+
+
+def _is_driver(proj: Project, mod: Module, fn: Func) -> bool:
+    for call in [n for n in ast.walk(fn.node) if isinstance(n, ast.Call)]:
+        if self_or_local_jit_info(proj, mod, fn, call) is not None:
+            return True
+        f = call.func
+        if isinstance(f, ast.Attribute) and f.attr in _DRIVER_ATTRS:
+            return True
+    return False
+
+
+def _loop_nodes(fn_node) -> list[ast.AST]:
+    out = []
+    for node in ast.walk(fn_node):
+        if isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+            out.extend(ast.walk(node))
+    return out
+
+
+def run_rl002(proj: Project, reachable: dict[Func, tuple[str, ...]]
+              ) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn, chain in reachable.items():
+        mod = fn.module
+        nested = {id(f.node) for f in mod.funcs if f is not fn}
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            kind = _sync_kind(mod, node)
+            if kind is None:
+                continue
+            via = f" (via {' -> '.join(chain)})" if len(chain) > 1 else ""
+            findings.append(Finding(
+                "RL002", mod.path, node.lineno,
+                f"host sync `{kind}` in jit-reachable {fn.qualname}{via} — "
+                "blocks dispatch every step; batch with one device_get "
+                "outside the hot path",
+                _src(mod, node)))
+        del nested
+    # driver loops
+    for mod in proj.modules.values():
+        for fn in mod.funcs:
+            if fn in reachable or isinstance(fn.node, ast.Lambda):
+                continue
+            if not _is_driver(proj, mod, fn):
+                continue
+            loop_body = _loop_nodes(fn.node)
+            seen_lines = set()
+            for node in loop_body:
+                if not isinstance(node, ast.Call):
+                    continue
+                kind = _sync_kind(mod, node)
+                if kind is None or node.lineno in seen_lines:
+                    continue
+                seen_lines.add(node.lineno)
+                findings.append(Finding(
+                    "RL002", mod.path, node.lineno,
+                    f"host sync `{kind}` inside a loop of {fn.qualname}, "
+                    "which drives jitted work — one blocking transfer per "
+                    "iteration; hoist or batch with device_get",
+                    _src(mod, node)))
+    return findings
+
+
+def _tracer_valued(mod: Module, test: ast.AST) -> str | None:
+    """A call into jax.numpy/lax/random inside an `if`/`while` test is a
+    tracer-valued predicate (minus known static reflection helpers)."""
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Call):
+            continue
+        qual = mod.dotted(node.func) or ""
+        if qual.rsplit(".", 1)[-1] in _STATIC_PREDICATES:
+            continue
+        if any(qual.startswith(ns) for ns in _TRACER_NAMESPACES):
+            return qual
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("any", "all")
+                and not node.args and not node.keywords):
+            return f".{node.func.attr}()"
+    return None
+
+
+def run_rl003(proj: Project, reachable: dict[Func, tuple[str, ...]]
+              ) -> list[Finding]:
+    findings: list[Finding] = []
+    # (a) Python control flow on tracer-valued tests in jit-reachable code
+    for fn in reachable:
+        mod = fn.module
+        for node in ast.walk(fn.node):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            culprit = _tracer_valued(mod, node.test)
+            if culprit is None:
+                continue
+            kw = "while" if isinstance(node, ast.While) else "if"
+            findings.append(Finding(
+                "RL003", mod.path, node.lineno,
+                f"Python `{kw}` on tracer-valued `{culprit}` in "
+                f"jit-reachable {fn.qualname} — trace-time branch; use "
+                "jnp.where / lax.cond / lax.while_loop",
+                _src(mod, node)))
+    # (b) non-hashable static args at jitted call sites
+    for mod in proj.modules.values():
+        for fn in mod.funcs:
+            if isinstance(fn.node, ast.Lambda):
+                continue
+            for call in [n for n in ast.walk(fn.node)
+                         if isinstance(n, ast.Call)]:
+                info = self_or_local_jit_info(proj, mod, fn, call)
+                if not info or not info.get("static"):
+                    continue
+                for pos in info["static"]:
+                    if not isinstance(pos, int) or pos >= len(call.args):
+                        continue
+                    arg = call.args[pos]
+                    if isinstance(arg, (ast.List, ast.Dict, ast.Set)):
+                        kind = type(arg).__name__.lower()
+                        findings.append(Finding(
+                            "RL003", mod.path, call.lineno,
+                            f"non-hashable {kind} literal passed as static "
+                            f"arg {pos} of a jitted callable in "
+                            f"{fn.qualname} — static args must be hashable "
+                            "(use a tuple)",
+                            _src(mod, call)))
+    return findings

@@ -1,0 +1,131 @@
+"""Opt-in runtime sanitizers: checkify value checks on the photonic
+signal chain and a recompilation sentinel for the training/serving hot
+loops.
+
+The static rules (RL001–RL005) catch structure; this layer catches
+*values* and *retraces* — the two failure modes no AST can see:
+
+* ``check_finite(x, name)`` — a ``checkify.check`` asserting every
+  element finite, emitted ONLY inside an active ``debug_checks()``
+  context.  The emu channel and the fused XLA kernel twin call it on
+  their outputs; ``photonic_matmul`` on the reference path likewise.
+  Outside the context it is literally ``return x``: an un-functionalized
+  ``checkify.check`` would fail at trace time under plain ``jax.jit``,
+  so the guard must be trace-time, not run-time.  The Trainer/Engine
+  enter the context exactly while tracing their checkified steps, so
+  ordinary sessions in the same process never see a stray check.
+* ``checked(fn)`` — ``checkify.checkify`` with the full sanitizer error
+  set (user checks + NaN/Inf + div-by-zero + out-of-bounds indexing).
+  Wrapped callables return ``(error, out)``; call ``error.throw()``
+  host-side.
+* ``RecompileSentinel`` — counts Python-level executions of a function
+  staged under ``jax.jit``.  The traced body only runs on a compilation
+  cache miss, so the count IS the retrace count: after ``warmup``
+  traces, any further trace raises ``RecompileError``.  The Trainer
+  installs one per jitted step and the Engine one per prefill/decode
+  step when built with ``debug_checks=True`` — a stable carried-state
+  pytree and constant batch shapes mean steady-state training/serving
+  must never retrace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+#: the default sanitizer error set: explicit checks, NaN/Inf generation,
+#: division by zero.  ``index_checks`` is deliberately NOT included: on
+#: this JAX version checkify's gather rule crashes on the transpose of
+#: ``take_along_axis`` (vjp of the cross-entropy label gather) with
+#: "tuple index out of range" — pass ``errors=STRICT_ERRORS`` explicitly
+#: for forward-only functions where OOB checking is safe.
+CHECK_ERRORS = (checkify.user_checks | checkify.float_checks
+                | checkify.div_checks)
+STRICT_ERRORS = CHECK_ERRORS | checkify.index_checks
+
+_DEBUG_STACK: list = []
+
+
+def debug_checks_enabled() -> bool:
+    return bool(_DEBUG_STACK)
+
+
+@contextlib.contextmanager
+def debug_checks():
+    """Arm ``check_finite`` for the dynamic extent (enter while *tracing*
+    a checkified function — the same discipline as ``drift.use_state``)."""
+    _DEBUG_STACK.append(True)
+    try:
+        yield
+    finally:
+        _DEBUG_STACK.pop()
+
+
+def check_finite(x, name: str):
+    """Assert every element of ``x`` finite when sanitizers are armed;
+    identity otherwise.  Returns ``x`` so call sites stay expressions."""
+    if _DEBUG_STACK:
+        checkify.check(jnp.all(jnp.isfinite(x)),
+                       f"non-finite values in {name} (debug_checks)")
+    return x
+
+
+def checked(fn, errors=CHECK_ERRORS):
+    """``checkify.checkify(fn, errors)`` with the sanitizer error set —
+    the wrapped fn returns ``(error, out)``."""
+    return checkify.checkify(fn, errors=errors)
+
+
+class RecompileError(RuntimeError):
+    """A jitted hot-path function retraced after its warmup budget."""
+
+
+class RecompileSentinel:
+    """Counts traces of one staged function; raises past ``warmup``.
+
+    Place ``sentinel.tick()`` first in the to-be-jitted Python body (or
+    wrap with ``sentinel.wrap``): jit only re-executes the Python body
+    when the (shapes, dtypes, pytree structure, static args) signature
+    misses the compilation cache, so each execution is one compile.
+    """
+
+    def __init__(self, name: str, warmup: int = 1):
+        self.name = name
+        self.warmup = warmup
+        self.traces = 0
+
+    def tick(self):
+        self.traces += 1
+        if self.traces > self.warmup:
+            raise RecompileError(
+                f"{self.name} retraced (trace #{self.traces}, warmup "
+                f"budget {self.warmup}) — changed pytree structure, shapes "
+                "or static args in a hot loop")
+
+    def wrap(self, fn):
+        @functools.wraps(fn)
+        def ticked(*args, **kwargs):
+            self.tick()
+            return fn(*args, **kwargs)
+
+        return ticked
+
+
+def instrument(fn, name: str, *, warmup: int = 1, errors=CHECK_ERRORS):
+    """The full debug harness for one hot-path function: recompile
+    sentinel + ``debug_checks`` armed during tracing + checkify.
+
+    Returns ``(wrapped, sentinel)``; ``wrapped(*args)`` (once jitted)
+    yields ``(error, out)``."""
+    sentinel = RecompileSentinel(name, warmup=warmup)
+
+    @functools.wraps(fn)
+    def body(*args, **kwargs):
+        sentinel.tick()
+        with debug_checks():
+            return fn(*args, **kwargs)
+
+    return checked(body, errors=errors), sentinel

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as obs_lib
+from repro.lint import runtime as lint_runtime
 from repro.serve.decode import make_prefill_step, make_serve_step, select_slots
 
 QUEUED = "QUEUED"
@@ -106,7 +107,7 @@ class Engine:
     def __init__(self, model, params, *, batch_slots: int = 8, max_len: int = 512,
                  eos_id: int | None = None, prefill_chunk: int = 16,
                  backend: str | None = None, photonics=None, hw_state=None,
-                 seed: int = 0, observer=None):
+                 seed: int = 0, observer=None, debug_checks: bool = False):
         self.model = model
         self.params = params
         self.observer = obs_lib.resolve(observer)
@@ -186,10 +187,29 @@ class Engine:
             nxt = jnp.where(active[:, None], nxt, token)
             return nxt, logits[:, -1, :], new_caches
 
-        self._prefill = jax.jit(prefill_fn)
-        self._decode = jax.jit(decode_fn)
+        self.debug_checks = debug_checks
+        self._sentinels: dict = {}
+        if debug_checks:
+            # checkified twins + recompile sentinels: prefill chunks and the
+            # decode batch are fixed-shape, so steady serving never retraces
+            pf_body, s_pf = lint_runtime.instrument(prefill_fn, "Engine.prefill")
+            dc_body, s_dc = lint_runtime.instrument(decode_fn, "Engine.decode")
+            self._prefill = jax.jit(pf_body)
+            self._decode = jax.jit(dc_body)
+            self._sentinels = {"prefill": s_pf, "decode": s_dc}
+        else:
+            self._prefill = jax.jit(prefill_fn)
+            self._decode = jax.jit(decode_fn)
         # seed-era alias used by older callers/tests
         self._step = jax.jit(serve_step)
+
+    def _run(self, fn, *args):
+        """Dispatch one jitted phase, unwrapping checkify when debugging."""
+        if self.debug_checks:
+            err, out = fn(*args)
+            err.throw()
+            return out
+        return fn(*args)
 
     # ------------------------------------------------------------------ admin
     @property
@@ -275,7 +295,8 @@ class Engine:
             n_valid[i] = take
         with self.observer.span("prefill_tick", cat="serve", slots=len(slots),
                                 tokens=int(n_valid.sum())):
-            last, self.caches, _ = self._prefill(
+            last, self.caches, _ = self._run(
+                self._prefill,
                 self.params, jnp.asarray(chunk), jnp.asarray(n_valid),
                 self.caches,
                 jnp.asarray(self._cache_len.astype(np.int32)),
@@ -288,7 +309,9 @@ class Engine:
         for i in slots:
             self._prompt_pos[i] += int(n_valid[i])
         if completed:
-            first = np.asarray(jnp.argmax(last, axis=-1))
+            # intentional sync: finished prompts must surface their first
+            # token to the host scheduler this tick
+            first = np.asarray(jnp.argmax(last, axis=-1))  # lint: disable=RL002
             now = time.monotonic()
             for i in completed:
                 req = self._requests[i]
@@ -319,12 +342,15 @@ class Engine:
         active = np.zeros((self.slots,), bool)
         active[slots] = True
         with self.observer.span("decode_tick", cat="serve", slots=len(slots)):
-            nxt, _, self.caches = self._decode(
+            nxt, _, self.caches = self._run(
+                self._decode,
                 self.params, jnp.asarray(self._tokens), self.caches,
                 jnp.asarray(self._cache_len.astype(np.int32)),
                 jnp.asarray(active),
                 self._next_key(), self.hw_state)
-        nxt = np.asarray(nxt)
+        # intentional sync: sampled tokens feed the host-side streams/stop
+        # logic; one transfer covers the whole decode batch
+        nxt = np.asarray(nxt)  # lint: disable=RL002
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += len(slots)
         self._cache_len[slots] += 1

@@ -49,6 +49,7 @@ from repro.data.pipeline import DevicePrefetcher
 from repro.dist import sharding
 from repro.hardware import calibrate as hw_calibrate
 from repro.hardware import drift as hw_drift
+from repro.lint import runtime as lint_runtime
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import SGDM
 from repro.utils import prng
@@ -80,6 +81,10 @@ class TrainerConfig:
     # multi-host deployments a step exceeding the deadline raises through
     # the supervisor which restarts the slow host from the last snapshot.
     step_deadline_s: float | None = None
+    # opt-in runtime sanitizers (repro.lint.runtime): checkify the jitted
+    # train step (NaN/Inf, div-by-zero, OOB indexing + the emu channel's
+    # check_finite assertions) and fail on any retrace after warmup.
+    debug_checks: bool = False
 
 
 def _resolve_data_parallel(flag) -> bool:
@@ -114,8 +119,18 @@ class Trainer:
         # step() keeps a non-donating jit — callers re-use the state they
         # pass in (metrics probes, tests); fit() owns its carried state and
         # donates it so XLA updates parameters in place.
-        self._step_fn = jax.jit(self._train_step)
-        self._fit_step_fn = jax.jit(self._train_step, donate_argnums=(0,))
+        self._sentinels: dict = {}
+        if cfg.debug_checks:
+            step_body, s_step = lint_runtime.instrument(
+                self._train_step, "Trainer.step")
+            fit_body, s_fit = lint_runtime.instrument(
+                self._train_step, "Trainer.fit_step")
+            self._step_fn = jax.jit(step_body)
+            self._fit_step_fn = jax.jit(fit_body, donate_argnums=(0,))
+            self._sentinels = {"step": s_step, "fit_step": s_fit}
+        else:
+            self._step_fn = jax.jit(self._train_step)
+            self._fit_step_fn = jax.jit(self._train_step, donate_argnums=(0,))
         self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.keep_ckpts) if cfg.ckpt_dir else None
         self._log_file = None
         self._log_keys = None
@@ -208,7 +223,11 @@ class Trainer:
     def _dispatch(self, state, batch, step_fn):
         t0 = time.monotonic()
         with self._mesh_ctx():
-            state, metrics = step_fn(state, batch)
+            if self.cfg.debug_checks:
+                err, (state, metrics) = step_fn(state, batch)
+                err.throw()  # surfaces checkify findings as JaxRuntimeError
+            else:
+                state, metrics = step_fn(state, batch)
         if self.cfg.step_deadline_s is not None:
             jax.block_until_ready(state["step"])
             dt = time.monotonic() - t0
@@ -327,9 +346,10 @@ class Trainer:
                         host = observer.log_step(step + 1, metrics)
                 else:
                     # one batched transfer for the whole dict — never one
-                    # blocking float() per metric
-                    host = {k: float(v) for k, v in
-                            jax.device_get(dict(metrics)).items()}
+                    # blocking float() per metric; the floats below read
+                    # host memory, not the device
+                    host = {k: float(v) for k, v in  # lint: disable=RL002
+                            jax.device_get(dict(metrics)).items()}  # lint: disable=RL002
                 self._log(step + 1, host)
                 if verbose:
                     txt = " ".join(f"{k}={v:.4f}"
@@ -354,6 +374,8 @@ class Trainer:
             with self._mesh_ctx():
                 _, metrics = loss_fn(state["params"], batch)
             for k, v in metrics.items():
-                total[k] = total.get(k, 0.0) + float(v)
+                # accumulate on device; a float() here would block per batch
+                total[k] = total.get(k, 0.0) + v
             n += 1
-        return {k: v / max(n, 1) for k, v in total.items()}
+        host = jax.device_get(total)  # one batched transfer for the run
+        return {k: float(v) / max(n, 1) for k, v in host.items()}

@@ -41,6 +41,17 @@ def split_dict(k: jax.Array, names: list[str]) -> dict[str, jax.Array]:
     return {n: fold_name(k, n) for n in names}
 
 
+def consume(k: jax.Array) -> jax.Array:
+    """Mark ``k`` as spent: identity at runtime, a kill to the linter.
+
+    Pass a key through ``consume`` at its FINAL use site —
+    ``jax.random.normal(consume(k), ...)`` — and ``repro.lint`` (RL001)
+    will flag any later use of the same binding instead of silently
+    allowing one more draw from an already-correlated stream.
+    """
+    return k
+
+
 def step_key(base_seed: int, step, name: str = "") -> jax.Array:
     """Key for a given training step — deterministic under restart.
 

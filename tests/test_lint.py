@@ -1,0 +1,469 @@
+"""repro.lint: static rules RL001-RL005 (bad fixture + clean twin each),
+suppression/baseline plumbing, and the runtime sanitizers (checkify value
+checks + recompile sentinels) through the Trainer and the emu channel."""
+
+import dataclasses
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import checkify
+
+from repro import api, lint
+from repro.core import photonics
+from repro.hardware import channel, mrr
+from repro.lint import runtime
+from repro.train import trainer as trainer_lib
+
+
+def rules_of(source, path="fixture.py"):
+    return {f.rule for f in lint.lint_source(textwrap.dedent(source), path)}
+
+
+# ---------------------------------------------------------------------------
+# RL001 — PRNG key discipline
+# ---------------------------------------------------------------------------
+
+def test_rl001_flags_key_reuse():
+    assert "RL001" in rules_of("""
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.uniform(key, (4,))
+            return a + b
+    """)
+
+
+def test_rl001_clean_with_split():
+    assert "RL001" not in rules_of("""
+        import jax
+
+        def f(key):
+            ka, kb = jax.random.split(key)
+            a = jax.random.normal(ka, (4,))
+            b = jax.random.uniform(kb, (4,))
+            return a + b
+    """)
+
+
+def test_rl001_fold_in_derivations_do_not_spend():
+    assert "RL001" not in rules_of("""
+        import jax
+
+        def f(key):
+            a = jax.random.normal(jax.random.fold_in(key, 1), (4,))
+            b = jax.random.normal(jax.random.fold_in(key, 2), (4,))
+            return a + b
+    """)
+
+
+def test_rl001_use_after_consume_flags():
+    assert "RL001" in rules_of("""
+        import jax
+        from repro.utils import prng
+
+        def f(key):
+            a = jax.random.normal(prng.consume(key), (4,))
+            b = jax.random.normal(key, (4,))
+            return a + b
+    """)
+
+
+def test_rl001_unknown_consumer_counts_as_spend():
+    assert "RL001" in rules_of("""
+        import jax
+
+        def f(key, helper):
+            a = helper(key)
+            b = jax.random.normal(key, (4,))
+            return a + b
+    """)
+
+
+def test_rl001_derive_only_callee_is_not_a_spend():
+    # the repo's named-folding idiom: callees that only fold_in from their
+    # key parameter may share one base key
+    assert "RL001" not in rules_of("""
+        import jax
+
+        def seg(x, key):
+            return jax.random.fold_in(key, 7)
+
+        def f(key):
+            a = seg(1, key)
+            b = seg(2, key)
+            return a + b
+    """)
+
+
+def test_rl001_exclusive_branches_do_not_stack_spends():
+    assert "RL001" not in rules_of("""
+        import jax
+
+        def f(key, fast):
+            if fast:
+                return jax.random.normal(key, (2,))
+            return jax.random.uniform(key, (4,))
+    """)
+
+
+def test_rl001_loop_invariant_key_flags():
+    assert "RL001" in rules_of("""
+        import jax
+
+        def f(key):
+            out = []
+            for _ in range(3):
+                out.append(jax.random.normal(key, (2,)))
+            return out
+    """)
+
+
+def test_rl001_nested_producer_does_not_make_result_a_key():
+    # jax.eval_shape(init, PRNGKey(0)) returns shapes, not a key
+    assert "RL001" not in rules_of("""
+        import jax
+
+        def f(init, use):
+            shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
+            use(shapes)
+            use(shapes)
+            return shapes
+    """)
+
+
+# ---------------------------------------------------------------------------
+# RL002 — host sync in a hot path
+# ---------------------------------------------------------------------------
+
+def test_rl002_flags_float_in_jitted_fn():
+    assert "RL002" in rules_of("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x) + 1.0
+    """)
+
+
+def test_rl002_flags_sync_reached_through_calls():
+    assert "RL002" in rules_of("""
+        import jax
+
+        def helper(x):
+            return x.item()
+
+        @jax.jit
+        def f(x):
+            return helper(x)
+    """)
+
+
+def test_rl002_flags_per_iteration_sync_in_driver_loop():
+    assert "RL002" in rules_of("""
+        import jax
+
+        def g(x):
+            return x * 2
+
+        step = jax.jit(g)
+
+        def run(xs):
+            out = []
+            for x in xs:
+                out.append(float(step(x)))
+            return out
+    """)
+
+
+def test_rl002_clean_driver_reads_once_after_loop():
+    assert "RL002" not in rules_of("""
+        import jax
+
+        def g(x):
+            return x * 2
+
+        step = jax.jit(g)
+
+        def run(xs):
+            y = None
+            for x in xs:
+                y = step(x)
+            return float(y)
+    """)
+
+
+def test_rl002_inline_suppression():
+    src = textwrap.dedent("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x) + 1.0  # lint: disable=RL002
+    """)
+    assert not lint.lint_source(src)
+
+
+# ---------------------------------------------------------------------------
+# RL003 — tracer-unsafe control flow / non-hashable static args
+# ---------------------------------------------------------------------------
+
+def test_rl003_flags_if_on_tracer_value():
+    assert "RL003" in rules_of("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            if jnp.any(x > 0):
+                return x
+            return -x
+    """)
+
+
+def test_rl003_clean_with_static_reflection():
+    assert "RL003" not in rules_of("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                return x * 2.0
+            return x
+    """)
+
+
+def test_rl003_flags_list_literal_static_arg():
+    assert "RL003" in rules_of("""
+        import jax
+
+        def g(x, shape):
+            return x.reshape(shape)
+
+        h = jax.jit(g, static_argnums=(1,))
+
+        def run(x):
+            return h(x, [4, 4])
+    """)
+
+
+def test_rl003_clean_tuple_static_arg():
+    assert "RL003" not in rules_of("""
+        import jax
+
+        def g(x, shape):
+            return x.reshape(shape)
+
+        h = jax.jit(g, static_argnums=(1,))
+
+        def run(x):
+            return h(x, (4, 4))
+    """)
+
+
+# ---------------------------------------------------------------------------
+# RL004 — frozen-config mutation / dict-mutation of carried state
+# ---------------------------------------------------------------------------
+
+def test_rl004_flags_frozen_dataclass_mutation():
+    assert "RL004" in rules_of("""
+        import dataclasses
+
+        @dataclasses.dataclass(frozen=True)
+        class Cfg:
+            lr: float = 0.1
+
+        def tune(cfg: Cfg):
+            cfg.lr = 0.2
+            return cfg
+    """)
+
+
+def test_rl004_clean_with_replace():
+    assert "RL004" not in rules_of("""
+        import dataclasses
+
+        @dataclasses.dataclass(frozen=True)
+        class Cfg:
+            lr: float = 0.1
+
+        def tune(cfg: Cfg):
+            cfg = dataclasses.replace(cfg, lr=0.2)
+            return cfg
+    """)
+
+
+def test_rl004_flags_dict_mutation_of_traced_state():
+    assert "RL004" in rules_of("""
+        import jax
+
+        @jax.jit
+        def step(state, batch):
+            state["x"] = state["x"] + batch
+            return state
+    """)
+
+
+def test_rl004_clean_rebuilt_state():
+    assert "RL004" not in rules_of("""
+        import jax
+
+        @jax.jit
+        def step(state, batch):
+            return {**state, "x": state["x"] + batch}
+    """)
+
+
+# ---------------------------------------------------------------------------
+# RL005 — donation hazards
+# ---------------------------------------------------------------------------
+
+def test_rl005_flags_read_after_donate():
+    assert "RL005" in rules_of("""
+        import jax
+
+        def train(state, batch):
+            return state, 0.0
+
+        fit = jax.jit(train, donate_argnums=(0,))
+
+        def run(state, batch):
+            new_state, loss = fit(state, batch)
+            return state["x"], new_state
+    """)
+
+
+def test_rl005_clean_same_statement_rebind():
+    assert "RL005" not in rules_of("""
+        import jax
+
+        def train(state, batch):
+            return state, 0.0
+
+        fit = jax.jit(train, donate_argnums=(0,))
+
+        def run(state, batch):
+            state, loss = fit(state, batch)
+            return state["x"]
+    """)
+
+
+# ---------------------------------------------------------------------------
+# baseline plumbing
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip(tmp_path):
+    src = textwrap.dedent("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x) + 1.0
+    """)
+    findings = lint.lint_source(src)
+    assert findings
+    path = tmp_path / "baseline.json"
+    lint.write_baseline(str(path), findings)
+    baseline = lint.load_baseline(str(path))
+    assert not lint.new_findings(findings, baseline)
+    # a fresh finding on a different line still surfaces
+    extra = lint.Finding("RL002", "fixture.py", 99, "msg", "other_code()")
+    assert lint.new_findings(findings + [extra], baseline) == [extra]
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizers
+# ---------------------------------------------------------------------------
+
+def test_check_finite_is_identity_when_unarmed():
+    # un-functionalized checkify.check would die at trace time under plain
+    # jit — outside debug_checks() the guard must emit nothing
+    @jax.jit
+    def f(x):
+        return runtime.check_finite(x, "t") * 2.0
+
+    out = f(jnp.array([1.0, jnp.inf]))
+    assert jnp.isinf(out[1])  # passed through untouched
+
+
+def test_checkify_catches_nan_in_emu_channel():
+    cfg = photonics.PhotonicConfig(noise_std=0.0, mrr=mrr.MRRConfig.ideal())
+    a = jnp.ones((4, 8)).at[0, 0].set(jnp.nan)
+    b = jnp.ones((3, 8))
+    body, _ = runtime.instrument(
+        lambda x, y: channel.emulated_matmul(x, y, cfg, None),
+        "emu", errors=checkify.user_checks)
+    err, _ = jax.jit(body)(a, b)
+    with pytest.raises(Exception, match="non-finite"):
+        err.throw()
+
+
+def test_checkify_passes_finite_emu_channel():
+    cfg = photonics.PhotonicConfig(noise_std=0.0, mrr=mrr.MRRConfig.ideal())
+    body, _ = runtime.instrument(
+        lambda x, y: channel.emulated_matmul(x, y, cfg, None),
+        "emu", errors=checkify.user_checks)
+    err, out = jax.jit(body)(jnp.ones((4, 8)), jnp.ones((3, 8)))
+    err.throw()  # no error
+    assert out.shape == (4, 3)
+
+
+def test_recompile_sentinel_raises_on_retrace():
+    sentinel = runtime.RecompileSentinel("f", warmup=1)
+
+    @jax.jit
+    @sentinel.wrap
+    def f(x):
+        return x + 1
+
+    f(jnp.ones((3,)))
+    f(jnp.ones((3,)))  # cache hit: no new trace
+    assert sentinel.traces == 1
+    with pytest.raises(runtime.RecompileError):
+        f(jnp.ones((4,)))  # new shape -> retrace
+
+
+def _batch(model, n=8):
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    return {"x": jax.random.normal(kx, (n, model.in_dim)),
+            "y": jax.random.randint(ky, (n,), 0, model.n_classes)}
+
+
+def test_debug_session_fit_smoke():
+    s = api.build_session(arch="mnist_mlp", algo="dfa", backend="emu",
+                          hardware="emu_onchip", smoke=True,
+                          log_every=10**9, debug_checks=True)
+    batch = _batch(s.model)
+    state, metrics = s.fit(lambda i: batch, total_steps=2, verbose=False)
+    assert jnp.isfinite(jax.device_get(metrics["loss"]))
+    assert s.trainer._sentinels["fit_step"].traces == 1
+
+
+def test_debug_trainer_catches_nan_batch():
+    s = api.build_session(arch="mnist_mlp", algo="dfa", smoke=True,
+                          log_every=10**9, debug_checks=True)
+    batch = _batch(s.model)
+    batch["x"] = batch["x"].at[0, 0].set(jnp.nan)
+    state = s.init_state()
+    with pytest.raises(Exception, match="(?i)nan|non-finite"):
+        s.step(state, batch)
+
+
+def test_debug_trainer_catches_retrace():
+    s = api.build_session(arch="mnist_mlp", algo="dfa", smoke=True,
+                          log_every=10**9, debug_checks=True)
+    state = s.init_state()
+    state, _ = s.step(state, _batch(s.model, 8))
+    with pytest.raises(runtime.RecompileError):
+        s.step(state, _batch(s.model, 4))  # batch-shape change -> retrace
+
+
+def test_debug_checks_off_is_default_and_unwrapped():
+    cfg = trainer_lib.TrainerConfig()
+    assert cfg.debug_checks is False
+    s = api.build_session(arch="mnist_mlp", algo="dfa", smoke=True,
+                          log_every=10**9)
+    assert s.trainer._sentinels == {}
