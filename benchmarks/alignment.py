@@ -1,0 +1,252 @@
+"""Diagnostics-plane study — BENCH_alignment.json (ISSUE 10 headline).
+
+Three measurements, one report:
+
+1. **Alignment curves** — a short MNIST-MLP DFA fit probed every
+   ``probe_every`` steps (``obs.introspect.AlignmentProbe``) on the ideal
+   ``ref`` backend and on the ``emu_onchip`` device model.  The per-probe
+   DFA-vs-BP cosine (``align_global``) should RISE over the fit — the
+   paper's core claim that the network "learns to align" with its fixed
+   random feedback — and the emu curve should track ref (noise shifts but
+   does not destroy alignment).  Full curves land in the report's meta;
+   first/last/gain per variant are gated-visible metrics.
+
+2. **Noise budget** — the emu_onchip run's last attribution row
+   (``obs.attribution.noise_budget``): per-source share of the observed
+   error power vs the ideal twin, the Σ-sources/total closure, and the
+   measured-vs-analytic thermal cross-check.  The run FAILS if the
+   closure is off by more than 10 % — the acceptance bar for "the noise
+   model is self-consistent" — so CI cannot go green with a noise source
+   the attribution cannot account for.
+
+3. **Probe overhead** — the SAME fused-emu qwen1.5-0.5b fit that
+   BENCH_obs times, with ``probe_every=100`` vs probe off (interleaved,
+   min-of-repeats walls).  ``probe_throughput_ratio`` is gated in
+   ``benchmarks/check_regression.py``; the acceptance bar is <= 5 %
+   overhead at that cadence.
+
+The emu_onchip run's metrics JSONL (probe rows included) is written next
+to the report as ``alignment-metrics.jsonl`` — CI uploads it so every
+build archives a loadable example of the diagnostics stream (render with
+``python -m repro.obs.summarize``).
+
+CLI:  PYTHONPATH=src python -m benchmarks.alignment [--steps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+BENCH_NAME = "alignment"
+
+ARCH = "mnist_mlp"
+OVERHEAD_ARCH = "qwen1.5-0.5b"
+
+# (variant key, hardware preset, backend)
+VARIANTS = (("ref", "ideal", "ref"), ("emu_onchip", "emu_onchip", "emu"))
+
+CLOSURE_TOL = 0.10  # acceptance: sources must sum to total within 10 %
+
+
+def _mnist_feed(model, batch: int, seed: int):
+    from repro.data import mnist, pipeline
+
+    data = mnist.load(seed=seed)
+    xtr, ytr = data["train"]
+    if xtr.shape[1] != model.in_dim:  # smoke configs shrink in_dim
+        xtr = xtr[:, :model.in_dim]
+    return pipeline.ArrayClassification(xtr, ytr, batch, seed)
+
+
+def _probed_fit(preset: str, backend: str, steps: int, probe_every: int,
+                metrics_path: str, seed: int = 0) -> None:
+    """One probed MNIST fit whose observer rows land in metrics_path."""
+    from repro import api, obs
+
+    session = api.build_session(
+        arch=ARCH, smoke=True, algo="dfa", hardware=preset, backend=backend,
+        probe_every=probe_every, log_every=probe_every, prefetch=0,
+        seed=seed)
+    pipe = _mnist_feed(session.model, batch=128, seed=seed)
+    if os.path.exists(metrics_path):
+        os.remove(metrics_path)  # JsonlSink appends; keep one run's rows
+    observer = obs.for_session(session, metrics_path=metrics_path)
+    session.fit(pipe.batch, total_steps=steps, verbose=False,
+                observer=observer)
+    observer.close()
+
+
+def _curve(rows: list[dict], metric: str) -> list[list[float]]:
+    return [[float(r["step"]), float(r["metrics"][metric])]
+            for r in rows if metric in r.get("metrics", {})]
+
+
+def alignment_curves(steps: int, probe_every: int, out_dir: str) -> dict:
+    """Probed ref + emu_onchip MNIST fits -> per-variant align curves,
+    the emu noise-budget table, and the archived diagnostics JSONL."""
+    from repro.obs import summarize
+
+    out = {"variants": {}, "paths": {}}
+    for key, preset, backend in VARIANTS:
+        suffix = "" if key == "emu_onchip" else f"-{key}"
+        path = os.path.join(out_dir, f"alignment-metrics{suffix}.jsonl")
+        _probed_fit(preset, backend, steps, probe_every, path)
+        rows = summarize.read_rows(path)
+        curve = _curve(rows, "align_global")
+        if not curve:
+            raise RuntimeError(f"{key}: no align_global probe rows in {path}")
+        vals = [v for _, v in curve]
+        layers = summarize.alignment_table(rows)
+        out["variants"][key] = {
+            "align_curve": curve,
+            "align_first": vals[0], "align_last": vals[-1],
+            "align_gain": vals[-1] - vals[0],
+            "align_layers": {name: s["last"] for name, s in layers.items()},
+        }
+        out["paths"][key] = path
+        if key == "emu_onchip":
+            nb = summarize.noise_budget_table(rows)
+            if not nb:
+                raise RuntimeError(f"emu_onchip: no nb_* rows in {path}")
+            if abs(nb["closure"] - 1.0) > CLOSURE_TOL:
+                raise RuntimeError(
+                    "noise-budget closure %.3f off by more than %.0f%% — "
+                    "a noise source the attribution cannot account for"
+                    % (nb["closure"], CLOSURE_TOL * 100))
+            out["noise_budget"] = nb
+    return out
+
+
+def _overhead_session(probe_every: int | None):
+    from repro import api
+
+    return api.build_session(
+        arch=OVERHEAD_ARCH, smoke=True, algo="dfa", hardware="emu_offchip",
+        backend="emu", emu_kernel="xla", recalibrate_every=16,
+        log_every=10**9, probe_every=probe_every)
+
+
+def _fit_wall_s(session, batch, steps: int) -> float:
+    import jax
+
+    t0 = time.monotonic()
+    state, _ = session.fit(lambda s: batch, total_steps=steps,
+                           verbose=False)
+    jax.block_until_ready(state)
+    return time.monotonic() - t0
+
+
+def probe_overhead(steps: int = 400, probe_every: int = 100,
+                   warmup: int = 8, repeats: int = 3, batch_size: int = 8,
+                   seq_len: int = 32) -> dict:
+    """Probe-on vs probe-off fit throughput on the fused emu step (same
+    shape BENCH_obs gates).  Interleaved min-of-repeats walls, like
+    obs_overhead: the min suppresses scheduler jitter and both modes see
+    the same conditions.  The warmup fit compiles the probe's jitted
+    side (cached on the trainer, so repeats pay only the probe's run
+    cost — exactly what a long training run would see)."""
+    from repro.data import tokens
+
+    off = _overhead_session(None)
+    on = _overhead_session(probe_every)
+    gen = tokens.MarkovTokens(off.model.cfg.vocab_size, seq_len,
+                              batch_size, 0)
+    batch = gen.batch(0)
+
+    _fit_wall_s(off, batch, warmup)
+    _fit_wall_s(on, batch, warmup)  # probe fires at step 0: compiles
+
+    off_walls, on_walls = [], []
+    for _ in range(repeats):
+        off_walls.append(_fit_wall_s(off, batch, steps))
+        on_walls.append(_fit_wall_s(on, batch, steps))
+    off_s, on_s = min(off_walls), min(on_walls)
+    off_sps, on_sps = steps / off_s, steps / on_s
+    return {
+        "arch": OVERHEAD_ARCH, "backend": "emu", "emu_kernel": "xla",
+        "steps": steps, "probe_every": probe_every, "repeats": repeats,
+        "probes_per_fit": len(range(0, steps, probe_every)),
+        "off": {"wall_s": off_s, "steps_per_s": off_sps},
+        "on": {"wall_s": on_s, "steps_per_s": on_sps},
+        "probe_throughput_ratio": on_sps / off_sps,
+        "probe_overhead_pct": (1.0 - on_sps / off_sps) * 100.0,
+    }
+
+
+def run(steps: int = 160, probe_every: int = 16,
+        overhead_steps: int = 400, overhead_repeats: int = 3,
+        out_dir: str = ".") -> dict:
+    import jax
+
+    curves = alignment_curves(steps, probe_every, out_dir)
+    overhead = probe_overhead(steps=overhead_steps,
+                              repeats=overhead_repeats)
+    return {
+        "arch": ARCH, "steps": steps, "probe_every": probe_every,
+        "jax_backend": jax.default_backend(),
+        **curves, "overhead": overhead,
+    }
+
+
+def bench_metrics(res: dict) -> dict:
+    """The gated BENCH metric view (see benchmarks/check_regression.py)."""
+    out = {}
+    for key, v in res["variants"].items():
+        out[f"{key}_align_first"] = v["align_first"]
+        out[f"{key}_align_last"] = v["align_last"]
+        out[f"{key}_align_gain"] = v["align_gain"]
+    nb = res["noise_budget"]
+    out["nb_closure"] = nb["closure"]
+    out["nb_thermal_share"] = nb["sources"]["thermal"]["share"]
+    out["nb_thermal_vs_analytic"] = nb["thermal_vs_analytic"]
+    ov = res["overhead"]
+    out["probe_throughput_ratio"] = ov["probe_throughput_ratio"]
+    out["probe_on_steps_per_s"] = ov["on"]["steps_per_s"]
+    return out
+
+
+def write_report(res: dict, out_dir: str = ".") -> str:
+    from repro.bench import write_bench
+
+    meta = {k: res[k] for k in ("arch", "steps", "probe_every",
+                                "jax_backend", "variants", "noise_budget",
+                                "overhead", "paths")}
+    return write_bench(BENCH_NAME, bench_metrics(res), meta=meta,
+                       out_dir=out_dir)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=160)
+    ap.add_argument("--probe-every", type=int, default=16)
+    ap.add_argument("--overhead-steps", type=int, default=400)
+    ap.add_argument("--overhead-repeats", type=int, default=3)
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_alignment.json + JSONL files")
+    args = ap.parse_args()
+    res = run(steps=args.steps, probe_every=args.probe_every,
+              overhead_steps=args.overhead_steps,
+              overhead_repeats=args.overhead_repeats, out_dir=args.out_dir)
+    for key, v in res["variants"].items():
+        print(f"{key}: align {v['align_first']:.4f} -> {v['align_last']:.4f}"
+              f" ({v['align_gain']:+.4f} over {res['steps']} steps)")
+    nb = res["noise_budget"]
+    shares = ", ".join(
+        f"{name} {s['share']:.1%}" for name, s in sorted(
+            nb["sources"].items(), key=lambda kv: -kv[1]["var"]))
+    print(f"noise budget (emu_onchip): {shares}; "
+          f"closure {nb['closure']:.3f}, "
+          f"thermal vs analytic {nb['thermal_vs_analytic']:.3f}")
+    ov = res["overhead"]
+    print(f"probe overhead ({ov['arch']}, probe_every={ov['probe_every']}): "
+          f"off {ov['off']['steps_per_s']:.2f} steps/s | "
+          f"on {ov['on']['steps_per_s']:.2f} steps/s | "
+          f"ratio {ov['probe_throughput_ratio']:.4f} "
+          f"({ov['probe_overhead_pct']:.2f}%)")
+    print("wrote", write_report(res, args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -78,6 +78,13 @@ GATES: dict[str, dict[str, tuple[str, float] | str]] = {
         "throughput_ratio": ("higher", 0.05),
         "on_steps_per_s": ("higher", _WALL),
     },
+    "alignment": {
+        # probe-on / probe-off throughput at probe_every=100 on the fused
+        # emu step: same-host ratio, tight gate (acceptance is <= 5%
+        # overhead; the tolerance absorbs scheduler jitter around it)
+        "probe_throughput_ratio": ("higher", 0.05),
+        "probe_on_steps_per_s": ("higher", _WALL),
+    },
 }
 
 

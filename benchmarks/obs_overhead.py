@@ -55,6 +55,35 @@ def _fit_wall_s(session, batch, steps: int, observer) -> float:
     return time.monotonic() - t0
 
 
+def probe_off_parity(steps: int = 4, batch_size: int = 8,
+                     seq_len: int = 32) -> bool:
+    """Acceptance check for the diagnostics plane: with ``probe_every``
+    left at its default (None), an observed fit must produce BIT-IDENTICAL
+    training state to an unobserved one — observability that perturbs
+    training is a bug, not overhead."""
+    import jax
+    import numpy as np
+
+    from repro import obs
+    from repro.data import tokens
+
+    def final_state(observed: bool):
+        session = _build_session(10**9)
+        gen = tokens.MarkovTokens(session.model.cfg.vocab_size, seq_len,
+                                  batch_size, 0)
+        batch = gen.batch(0)
+        observer = obs.for_session(session) if observed else None
+        state, _ = session.fit(lambda s: batch, total_steps=steps,
+                               verbose=False, observer=observer)
+        return jax.device_get(state)
+
+    plain, observed = final_state(False), final_state(True)
+    return all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(plain),
+                        jax.tree_util.tree_leaves(observed)))
+
+
 def run(steps: int = 96, warmup: int = 8, batch_size: int = 8,
         seq_len: int = 32, log_every: int = 1, repeats: int = 5,
         out_dir: str = ".") -> dict:
@@ -102,6 +131,7 @@ def run(steps: int = 96, warmup: int = 8, batch_size: int = 8,
     ratio = on_sps / off_sps
     with open(metrics_path) as f:
         n_rows = sum(1 for line in f if line.strip())
+    parity = probe_off_parity(batch_size=batch_size, seq_len=seq_len)
     return {
         "arch": ARCH, "backend": "emu", "emu_kernel": "xla",
         "steps": steps, "repeats": repeats, "log_every": log_every,
@@ -111,6 +141,7 @@ def run(steps: int = 96, warmup: int = 8, batch_size: int = 8,
         "on": {"wall_s": on_s, "steps_per_s": on_sps},
         "throughput_ratio": ratio,
         "overhead_pct": (1.0 - ratio) * 100.0,
+        "probe_off_parity": parity,
         "trace_events": len(observer.trace.events),
         "metric_rows": n_rows,
         "alerts": len(observer.alerts),
@@ -126,6 +157,9 @@ def bench_metrics(res: dict) -> dict:
         "on_steps_per_s": res["on"]["steps_per_s"],
         "throughput_ratio": res["throughput_ratio"],
         "overhead_pct": res["overhead_pct"],
+        # 1.0 iff an observed fit (probe off) matches an unobserved one
+        # bitwise — failure here means observability perturbed training
+        "probe_off_parity": float(res["probe_off_parity"]),
         "trace_events": float(res["trace_events"]),
         "metric_rows": float(res["metric_rows"]),
     }
@@ -160,6 +194,8 @@ def main() -> None:
           f"(overhead {res['overhead_pct']:.2f}%)")
     print(f"trace: {res['trace_events']} events -> {res['trace_path']}; "
           f"metrics: {res['metric_rows']} rows -> {res['metrics_path']}")
+    print(f"probe-off parity (observed fit bitwise == unobserved): "
+          f"{res['probe_off_parity']}")
     print("wrote", write_report(res, args.out_dir))
 
 

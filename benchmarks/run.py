@@ -40,7 +40,10 @@ plus the measured-feedback schedule co-tuning) as
 ``BENCH_emu_kernel.json``, and the observability overhead study
 (``benchmarks.obs_overhead``: observer-off vs observer-on fit throughput
 on the fused emu step, with the run's Chrome trace + metrics JSONL as
-artifacts) as ``BENCH_obs.json``; combined with ``--smoke`` it also
+artifacts) as ``BENCH_obs.json``, and the diagnostics-plane study
+(``benchmarks.alignment``: DFA-vs-BP alignment curves, the emu
+noise-budget attribution + closure check, probe-on vs probe-off
+throughput) as ``BENCH_alignment.json``; combined with ``--smoke`` it also
 writes ``BENCH_smoke.json``.  CI archives the ``BENCH_*.json`` files — they are
 the repo's perf trajectory, and ``benchmarks/check_regression.py`` gates
 changes against the committed ``benchmarks/baselines/``.
@@ -371,6 +374,18 @@ def bench_obs(out_dir: str = ".", steps: int = 96) -> str:
     return path
 
 
+def bench_alignment(out_dir: str = ".", steps: int = 160) -> str:
+    """Run the diagnostics-plane study (DFA-vs-BP alignment curves on ref
+    + emu_onchip MNIST fits, the emu noise-budget attribution with its
+    closure check, probe-on vs probe-off throughput) and write
+    BENCH_alignment.json plus the archived diagnostics JSONL."""
+    al = _sibling("alignment")
+
+    path = al.write_report(al.run(steps=steps, out_dir=out_dir), out_dir)
+    print(f"[bench] wrote {path}", flush=True)
+    return path
+
+
 def _dryrun_path(out_dir: str = ".") -> str:
     """Where the roofline's dry-run record lives: the env override, an
     existing local ``results/dryrun.json``, else INSIDE the bench dir —
@@ -470,6 +485,7 @@ def main() -> None:
         bench_serving(out_dir=args.bench_dir)
         bench_emu_kernel(out_dir=args.bench_dir)
         bench_obs(out_dir=args.bench_dir)
+        bench_alignment(out_dir=args.bench_dir)
         return
     print("name,us_per_call,derived")
     for name, fn in TABLES:

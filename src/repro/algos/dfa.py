@@ -335,22 +335,26 @@ def make_fused_train_step(model, cfg: DFAConfig, optimizer):
     return step
 
 
+def tree_cosine(a, b):
+    """cos(a, b) over all leaves of two same-structure pytrees, in f32.
+    0.0 for leafless trees (a parameter-free segment has no direction)."""
+    f32 = lambda t: t.astype(jnp.float32)
+    la = [f32(x) for x in jax.tree_util.tree_leaves(a)]
+    lb = [f32(x) for x in jax.tree_util.tree_leaves(b)]
+    if not la or not lb:
+        return jnp.float32(0.0)
+    num = sum(jnp.vdot(x, y) for x, y in zip(la, lb))
+    na = jnp.sqrt(sum(jnp.vdot(x, x) for x in la))
+    nb = jnp.sqrt(sum(jnp.vdot(x, x) for x in lb))
+    return num / jnp.maximum(na * nb, 1e-12)
+
+
 def grad_alignment(dfa_grads, bp_grads):
     """Per-subtree cosine(DFA, BP) — the 'alignment' diagnostic (the theory
-    in the paper's ref [29] predicts this grows during the align phase)."""
-    out = {}
-    for name in dfa_grads:
-        a = dfa_grads[name]
-        b = bp_grads[name]
-        num = sum(
-            jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
-            for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
-        )
-        f32 = lambda t: t.astype(jnp.float32)
-        na = jnp.sqrt(sum(jnp.vdot(x, x) for x in map(f32, jax.tree_util.tree_leaves(a))))
-        nb = jnp.sqrt(sum(jnp.vdot(x, x) for x in map(f32, jax.tree_util.tree_leaves(b))))
-        out[name] = num / jnp.maximum(na * nb, 1e-12)
-    return out
+    in the paper's ref [29] predicts this grows during the align phase).
+    ``obs.introspect.AlignmentProbe`` samples this in-situ during fit."""
+    return {name: tree_cosine(dfa_grads[name], bp_grads[name])
+            for name in dfa_grads}
 
 
 class DFAAlgorithm(base.Algorithm):

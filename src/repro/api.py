@@ -197,12 +197,19 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
                   ckpt_every: int = 500, log_every: int = 50,
                   log_path: str | None = None,
                   step_deadline_s: float | None = None,
-                  observe=False, debug_checks: bool = False) -> Session:
+                  observe=False, probe_every: int | None = None,
+                  debug_checks: bool = False) -> Session:
     """Compose one cell of the algorithm × hardware × backend matrix.
 
     ``observe``: ``False`` (default) runs without observability; ``True``
     attaches a session-wired ``obs.Observer`` (hardware monitor on
     stateful-hw backends); an ``Observer`` instance is taken as given.
+
+    ``probe_every``: in-situ diagnostics cadence — every this many steps
+    ``fit`` runs the ``obs.introspect.AlignmentProbe`` (DFA-vs-BP
+    alignment per layer, grad norms, and on the emu backend the
+    ``obs.attribution`` noise budget), logged as observer rows.  The
+    default None keeps training bit-identical to an unprobed run.
 
     ``debug_checks``: opt into the ``repro.lint.runtime`` sanitizers — the
     train step (and any ``session.engine()``) runs under
@@ -303,6 +310,7 @@ def build_session(*, arch="mnist_mlp", algo: str = "dfa", hardware="ideal",
         ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
         log_every=log_every, log_path=log_path,
         step_deadline_s=step_deadline_s,
+        probe_every=probe_every,
         debug_checks=debug_checks,
     )
     session = Session(model=model, algorithm=algorithm,

@@ -37,6 +37,7 @@ it; the Trainer jits it as part of the train step.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 
 import jax
@@ -238,9 +239,89 @@ def bank_product(a_n, b_n, cfg, key=None, *, residual=None):
     if device.adc_bits is not None:
         # each pass is digitised (per bus) before accumulating; ADC full
         # scale is the bank's maximal inner product, ±bank_cols normalised
-        p = photonics.fake_quant(p, device.adc_bits, amax=float(cfg.bank_cols))
+        # (a config constant, not a tracer sync)
+        p = photonics.fake_quant(p, device.adc_bits, amax=float(cfg.bank_cols))  # lint: disable=RL002
     out = jnp.sum(p, axis=(-2, -1))  # digital accumulation: buses × cycles
     return out.reshape(t, -1)[:, :m]
+
+
+# ---------------------------------------------------------------------------
+# Source-toggle seam (noise-budget attribution, ``repro.obs.attribution``).
+# Each physical error source in the chain above can be isolated: a config
+# twin with the SAME geometry (bank tiling, buses, failures — so panel
+# schedules, padding and noise masks match the real run) but every other
+# nonideality off.  Sole-source re-runs under the same PRNG key then see
+# the same per-pass draws as the full chain, so their error powers are
+# directly comparable.
+# ---------------------------------------------------------------------------
+
+NOISE_SOURCES: tuple[str, ...] = (
+    "quantization",  # DAC/weight fake-quant + heater-DAC command quant
+    "thermal",       # per-pass BPD read/thermal floor (cfg.noise_std)
+    "shot",          # signal-dependent shot noise
+    "adc",           # per-pass output ADC
+    "drift",         # carried resonance-drift residual (needs `residual`)
+    "crosstalk",     # intra-bank + inter-bus thermal crosstalk
+    "dead_rings",    # fabrication-yield dead rings
+)
+
+
+def ideal_twin(cfg):
+    """Nonideality-free twin of ``cfg``: identical geometry and schedule
+    (bank_rows/cols, n_buses, failed_buses, f_s), every physical error
+    source off.  The attribution probe's clean reference."""
+    device = cfg.mrr or mrr.MRRConfig()
+    return dataclasses.replace(
+        cfg, noise_std=0.0, input_bits=None, weight_bits=None,
+        mrr=dataclasses.replace(
+            mrr.MRRConfig.ideal(), gamma=device.gamma,
+            thermal_settle_s=device.thermal_settle_s))
+
+
+def isolate_source(cfg, source: str):
+    """``cfg`` with exactly one physical error source active.
+
+    For "drift" the residual itself is the caller's to supply
+    (``bank_product(..., residual=)``); the returned config only restores
+    the device's command clipping so the perturbed detunings land where
+    the real chain puts them.  Unknown names raise.
+    """
+    if source not in NOISE_SOURCES:
+        raise ValueError(
+            f"unknown noise source {source!r} (one of {NOISE_SOURCES})")
+    device = cfg.mrr or mrr.MRRConfig()
+    base = ideal_twin(cfg)
+    ideal = base.mrr
+    if source == "quantization":
+        return dataclasses.replace(
+            base, input_bits=cfg.input_bits, weight_bits=cfg.weight_bits,
+            mrr=dataclasses.replace(ideal, heater_bits=device.heater_bits,
+                                    delta_max=device.delta_max))
+    if source == "thermal":
+        return dataclasses.replace(base, noise_std=cfg.noise_std,
+                                   noise_convention=cfg.noise_convention)
+    if source == "shot":
+        return dataclasses.replace(
+            base, mrr=dataclasses.replace(ideal,
+                                          shot_noise=device.shot_noise))
+    if source == "adc":
+        return dataclasses.replace(
+            base, mrr=dataclasses.replace(ideal, adc_bits=device.adc_bits))
+    if source == "drift":
+        return dataclasses.replace(
+            base, mrr=dataclasses.replace(ideal, delta_max=device.delta_max))
+    if source == "crosstalk":
+        return dataclasses.replace(
+            base, mrr=dataclasses.replace(
+                ideal, crosstalk=device.crosstalk,
+                bus_crosstalk=device.bus_crosstalk,
+                compensate_crosstalk=device.compensate_crosstalk,
+                ct_iters=device.ct_iters, delta_max=device.delta_max))
+    # dead_rings
+    return dataclasses.replace(
+        base, mrr=dataclasses.replace(ideal,
+                                      dead_ring_rate=device.dead_ring_rate,
+                                      yield_seed=device.yield_seed))
 
 
 def resolve_emu_kernel(spec: str | None = None) -> str:

@@ -80,6 +80,11 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="append obs metrics rows (JSONL) to PATH; render "
                          "with python -m repro.obs.summarize")
+    ap.add_argument("--probe-every", type=int, default=None, metavar="N",
+                    help="in-situ diagnostics cadence: every N steps log "
+                         "DFA-vs-BP alignment per layer (and the emu "
+                         "noise budget) as observer rows — see the "
+                         "alignment/noise-budget tables in summarize")
     args = ap.parse_args()
     if args.power_budget_w is not None and not args.autotune:
         ap.error("--power-budget-w only steers --autotune")
@@ -101,6 +106,7 @@ def main():
         schedule="auto" if args.autotune else None,
         power_budget_w=args.power_budget_w,
         schedule_batch=args.batch if args.autotune else None,
+        probe_every=args.probe_every,
     )
     model = session.model
     observer = None
@@ -162,7 +168,8 @@ def main():
         if args.metrics_out:
             print(f"[obs] wrote metrics {args.metrics_out}")
         if observer.alerts:
-            print(f"[obs] {len(observer.alerts)} hardware alert(s); first: "
+            print(f"[obs] {len(observer.alerts)} alert(s) "
+                  "(hwmon + anomaly); first: "
                   f"{observer.alerts[0].message}")
 
 

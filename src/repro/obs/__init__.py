@@ -1,7 +1,8 @@
-"""``repro.obs`` — unified observability: metrics, tracing, and photonic
-hardware health monitoring across train / serve / sim.
+"""``repro.obs`` — unified observability: metrics, tracing, hardware
+health monitoring, and the diagnostics plane (alignment telemetry,
+noise-budget attribution, anomaly detection) across train / serve / sim.
 
-One ``Observer`` bundles the three planes:
+One ``Observer`` bundles the planes:
 
 * ``metrics`` (``obs.metrics.Registry``) — counters / gauges /
   histograms fanned out to pluggable sinks (in-memory ring, JSONL file).
@@ -16,14 +17,30 @@ One ``Observer`` bundles the three planes:
   the OU residual prediction for the run's recalibration cadence against
   the measured ``hw_residual_rms``, warn-level alerts when the PR 7
   autotuner's ``drift_budget`` is crossed, effective-bits and dead-ring
-  gauges.
+  gauges.  Attached only when the device actually drifts
+  (``MRRConfig.stateful``) — a drift-free or abstract-noise session logs
+  no ``hw_*`` rows.
+* ``anomaly`` (``obs.anomaly.AnomalyDetector``) — EWMA + MAD bands over
+  the drained rows (loss, alignment, ``hw_residual_rms``, throughput)
+  firing edge-triggered ``WARN:anomaly:<metric>`` instants, so an
+  alignment collapse or a dying bus is a *named* event in the trace and
+  JSONL, not a flat curve.
 
-Wiring: ``api.build_session(observe=...)`` / ``Session.fit(observer=)``
-/ ``Engine(observer=)``; ``launch/train.py`` and ``launch/serve.py``
-expose ``--trace-out`` / ``--metrics-out``; ``python -m
-repro.obs.summarize`` renders a metrics JSONL back into tables;
-``benchmarks/obs_overhead.py`` measures the observer's cost on the fused
-emu step (BENCH_obs.json, CI-gated ≤ a few percent).
+The in-situ diagnostics themselves live beside this module:
+``obs.introspect.AlignmentProbe`` (DFA-vs-BP alignment sampled every
+``probe_every`` steps — ``build_session(probe_every=)``,
+``launch/train.py --probe-every``) and ``obs.attribution.noise_budget``
+(per-physical-source error decomposition on the emu backend, with the
+analytic ``noise_sigma_total`` cross-check).
+
+Wiring: ``api.build_session(observe=..., probe_every=...)`` /
+``Session.fit(observer=)`` / ``Engine(observer=)``; ``launch/train.py``
+and ``launch/serve.py`` expose ``--trace-out`` / ``--metrics-out``;
+``python -m repro.obs.summarize`` renders a metrics JSONL back into
+tables (alignment and noise-budget tables included);
+``benchmarks/obs_overhead.py`` / ``benchmarks/alignment.py`` measure the
+observer's and the probe's cost (BENCH_obs.json / BENCH_alignment.json,
+CI-gated).
 
 ``NULL`` is the disabled-observer fast path: every method is a no-op and
 ``span`` returns one shared reusable context manager, so instrumented
@@ -36,6 +53,7 @@ from __future__ import annotations
 import contextlib
 
 from repro.obs import export
+from repro.obs.anomaly import AnomalyAlert, AnomalyDetector
 from repro.obs.hwmon import HardwareMonitor, HwAlert
 from repro.obs.metrics import (Counter, Gauge, Histogram, JsonlSink,
                                MemorySink, Registry)
@@ -43,11 +61,13 @@ from repro.obs.trace import TraceRecorder
 
 
 class Observer:
-    """The bound (metrics, trace, hwmon) triple instrumented code talks to.
+    """The bound (metrics, trace, hwmon, anomaly) bundle instrumented
+    code talks to.
 
-    All three parts are optional; missing ones default to fresh in-memory
+    All parts are optional; missing ones default to fresh in-memory
     instances (``hwmon`` to None — attach one via ``for_session`` or the
-    constructor when the run carries hardware state).  ``metrics_path`` /
+    constructor when the run carries hardware state; ``anomaly`` to a
+    default-watch ``AnomalyDetector``).  ``metrics_path`` /
     ``trace_path`` add a JSONL sink / write the trace on ``close()``.
     """
 
@@ -56,6 +76,7 @@ class Observer:
     def __init__(self, *, metrics: Registry | None = None,
                  trace: TraceRecorder | None = None,
                  hwmon: HardwareMonitor | None = None,
+                 anomaly: AnomalyDetector | None = None,
                  metrics_path: str | None = None,
                  trace_path: str | None = None,
                  memory_capacity: int = 4096):
@@ -69,6 +90,7 @@ class Observer:
         self.metrics = metrics
         self.trace = trace if trace is not None else TraceRecorder()
         self.hwmon = hwmon
+        self.anomaly = anomaly if anomaly is not None else AnomalyDetector()
         self.trace_path = trace_path
         self._alerts_emitted = 0
 
@@ -86,9 +108,10 @@ class Observer:
     def log_step(self, step, device_metrics) -> dict:
         """Drain one interval's device metrics (single batched
         ``device_get`` inside ``Registry.record``), run the hardware
-        monitor over the host scalars, chart the hw gauges as trace
-        counters, and surface any new alert as a warn instant.  Returns
-        the host-side scalar dict (hw gauges merged in)."""
+        monitor and the anomaly detector over the host scalars, chart the
+        hw gauges as trace counters, and surface any new alert as a warn
+        instant.  Returns the host-side scalar dict (hw gauges and
+        anomaly flags merged in)."""
         host = self.metrics.drain(device_metrics)
         if self.hwmon is not None:
             gauges = self.hwmon.sample(step, host)
@@ -103,6 +126,14 @@ class Observer:
                                    message=alert.message)
                 self.metrics.counter("hwmon_alerts").inc()
             self._alerts_emitted = len(self.hwmon.alerts)
+        if self.anomaly is not None:
+            for alert in self.anomaly.observe(step, host):
+                self.trace.instant(f"WARN:anomaly:{alert.metric}",
+                                   cat="anomaly", step=alert.step,
+                                   value=alert.value, center=alert.center,
+                                   band=alert.band, message=alert.message)
+                self.metrics.counter("anomaly_alerts").inc()
+                host = {**host, f"anomaly_{alert.metric}": 1.0}
         for k, v in host.items():
             self.metrics.gauge(k).set(v)
         self.metrics.emit(step, host)
@@ -110,9 +141,19 @@ class Observer:
 
     @property
     def alerts(self) -> list:
-        return [] if self.hwmon is None else list(self.hwmon.alerts)
+        """hwmon + anomaly alerts, in emission order per plane."""
+        out: list = [] if self.hwmon is None else list(self.hwmon.alerts)
+        if self.anomaly is not None:
+            out.extend(self.anomaly.alerts)
+        return out
 
     # ---- teardown ----
+    def flush(self) -> None:
+        """Push buffered sink bytes to disk — the fit/engine loops call
+        this on the way out of an exception so an interrupted run still
+        leaves parseable JSONL."""
+        self.metrics.flush()
+
     def close(self) -> str | None:
         """Flush the sinks; write the trace when ``trace_path`` was given.
         Returns the trace path written (or None)."""
@@ -149,6 +190,9 @@ class NullObserver:
     def alerts(self) -> list:
         return []
 
+    def flush(self) -> None:
+        pass
+
     def close(self) -> None:
         pass
 
@@ -170,13 +214,17 @@ def resolve(observer) -> Observer | NullObserver:
 def for_session(session, *, metrics_path: str | None = None,
                 trace_path: str | None = None) -> Observer:
     """An ``Observer`` wired for one ``api.Session``: when the session's
-    backend carries stateful hardware, a ``HardwareMonitor`` is attached
-    with the session's device description, recalibration cadence, and —
-    when the schedule autotuner planned one — its ``drift_budget``."""
+    backend carries stateful hardware AND the device actually drifts
+    (``MRRConfig.stateful``), a ``HardwareMonitor`` is attached with the
+    session's device description, recalibration cadence, and — when the
+    schedule autotuner planned one — its ``drift_budget``.  Drift-free
+    devices (``emu_ideal``) and the ref/pallas backends get no monitor,
+    so their rows carry no vacuous ``hw_*`` gauges."""
     hwmon = None
     cfg = session.config
     device = cfg.dfa.photonics.mrr
-    if getattr(session.trainer, "_hw_stateful", False) and device is not None:
+    if (getattr(session.trainer, "_hw_stateful", False)
+            and device is not None and device.stateful):
         budget = None
         if session.schedule is not None:
             budget = getattr(session.schedule, "drift_budget", None)
@@ -189,7 +237,8 @@ def for_session(session, *, metrics_path: str | None = None,
 
 
 __all__ = [
-    "Counter", "Gauge", "HardwareMonitor", "Histogram", "HwAlert",
-    "JsonlSink", "MemorySink", "NULL", "NullObserver", "Observer",
-    "Registry", "TraceRecorder", "export", "for_session", "resolve",
+    "AnomalyAlert", "AnomalyDetector", "Counter", "Gauge",
+    "HardwareMonitor", "Histogram", "HwAlert", "JsonlSink", "MemorySink",
+    "NULL", "NullObserver", "Observer", "Registry", "TraceRecorder",
+    "export", "for_session", "resolve",
 ]

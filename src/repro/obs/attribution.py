@@ -1,0 +1,91 @@
+"""Photonic noise-budget attribution: decompose the emu backend's output
+error into per-source physical contributions.
+
+``noise_budget(e, b, cfg, key, residual=)`` re-runs ONE sampled feedback
+panel product (e·Bᵀ, the paper's Eq. 1 projection) through
+``hardware.channel.bank_product`` several times:
+
+* a **clean** pass under ``channel.ideal_twin(cfg)`` — same geometry and
+  panel schedule, every nonideality off;
+* the **full** configured chain (the error power actually observed);
+* one **sole-source** pass per ``channel.NOISE_SOURCES`` entry
+  (quantization, thermal, shot, ADC, drift residual, crosstalk, dead
+  rings) under ``channel.isolate_source``.
+
+All passes share the caller's PRNG key, so a sole-source run sees the
+same per-pass noise realisation as the full chain and the error powers
+are directly comparable.  Emitted gauges (all mean-square error vs the
+clean pass, natural output units):
+
+* ``nb_<source>_var`` per source, ``nb_total_var`` for the full chain;
+* ``nb_sum_var`` and ``nb_closure`` = Σ sources / total — for
+  independent zero-mean sources this is ≈ 1; the residual IS the gauge.
+  A closure drifting from 1 means the noise model grew a coupling (or a
+  bug) that the per-source accounting does not capture;
+* ``nb_thermal_vs_analytic`` — measured thermal-only error std over
+  ``photonics.noise_sigma_total``'s closed-form accounting.  This is the
+  canonical consistency check between ``hardware/channel.py``'s sampled
+  chain and ``core/photonics.py``'s analytic path: any future edit that
+  changes one but not the other moves this ratio off 1.
+
+Everything is pure traceable jnp — ``obs.introspect.AlignmentProbe``
+folds it into its single jitted probe function on stateful-hardware
+sessions, and tests/benchmarks call it standalone.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import photonics
+from repro.hardware import channel
+
+SOURCES = channel.NOISE_SOURCES
+
+_TINY = 1e-30
+
+
+def _product(a, b, cfg, key, residual):
+    """emulated_matmul's "ref" spine with the residual under explicit
+    control: encode, bank product, rescale.  No ambient drift-state
+    lookup — sole-source runs must not pick up the trainer's
+    ``drift.use_state`` context."""
+    a_n, b_n, s_a, s_b = photonics.normalise_operands(a, b, cfg)
+    out = channel.bank_product(a_n, b_n, cfg, key, residual=residual)
+    return out * (s_a * s_b)
+
+
+def _power(x):
+    return jnp.mean(jnp.square(x.astype(jnp.float32)))
+
+
+def noise_budget(e, b, cfg, key, *, residual=None) -> dict:
+    """Per-source error-power attribution for one panel product.
+
+    e: (T, K) sampled error rows; b: (M, K) feedback bank; cfg: the emu
+    session's ``PhotonicConfig``; key: a probe-owned key (never a
+    training key); residual: the carried drift-cal residual, if any.
+    -> flat dict of traceable scalar gauges (``nb_*``).
+    """
+    clean = _product(e, b, channel.ideal_twin(cfg), None, None)
+    full = _product(e, b, cfg, key, residual)
+    total = _power(full - clean)
+    out = {"nb_total_var": total}
+    acc = jnp.float32(0.0)
+    for src in SOURCES:
+        res = residual if src == "drift" else None
+        # common random numbers BY DESIGN: every sole-source run must see
+        # the same draw as the full run, so differences are purely the
+        # source being toggled
+        only = _product(e, b, channel.isolate_source(cfg, src), key, res)  # lint: disable=RL001
+        power = _power(only - clean)
+        out[f"nb_{src}_var"] = power
+        acc = acc + power
+    out["nb_sum_var"] = acc
+    out["nb_closure"] = acc / jnp.maximum(total, _TINY)
+    if cfg.noise_std > 0.0:
+        _, _, s_a, s_b = photonics.normalise_operands(e, b, cfg)
+        analytic = photonics.noise_sigma_total(e.shape[-1], s_a, s_b, cfg)
+        out["nb_thermal_vs_analytic"] = (
+            jnp.sqrt(out["nb_thermal_var"]) / jnp.maximum(analytic, _TINY))
+    return out

@@ -1,0 +1,180 @@
+"""In-situ DFA alignment telemetry: the interval-sampled probe behind
+``TrainerConfig.probe_every`` / ``build_session(probe_every=)``.
+
+The paper's training claim is *feedback alignment*: the fixed photonic
+feedback banks only train the network if the DFA update progressively
+aligns with the true gradient.  Loss curves cannot distinguish "aligning
+slowly" from "alignment silently broken by analog noise" — this probe
+can.  Every ``probe_every`` steps the Trainer calls ``AlignmentProbe``
+on the step's own (state, batch) BEFORE the update runs and logs:
+
+* ``align_<segment>`` — cosine between the DFA gradient and the exact
+  BP gradient of the same batch, per parameter subtree (the paper's
+  ref [29] predicts these grow during the align phase);
+* ``align_global``   — the cosine over all compared leaves at once;
+* ``gnorm_dfa_<s>`` / ``gnorm_bp_<s>`` — per-subtree gradient norms;
+* ``upd_ratio_<s>``  — lr·‖g_dfa‖/‖p‖, the update/parameter norm ratio
+  (the classic "is this layer actually moving" gauge);
+* on stateful-hardware (emu) sessions, the ``nb_*`` noise-budget
+  attribution of ``repro.obs.attribution`` for one sampled feedback
+  panel product.
+
+Contract with training (tested by tests/test_introspect.py):
+
+* **No PRNG consumption.**  The probe re-derives the step's keys from
+  ``(seed, step, name)`` exactly as ``Trainer._train_step`` does — pure
+  function evaluation, nothing drawn from a carried stream — so
+  probe-on and probe-off runs produce bit-identical training states.
+* **No donation.**  The probe's jitted function never donates its
+  inputs; the fit loop hands the same state buffers to the (donating)
+  train step right after.
+* **One batched drain.**  The probe returns device scalars; the fit
+  loop pushes them through ``Observer.log_step`` (one ``device_get``).
+
+Analytic anchor: with ideal photonics and the last segment's feedback
+bank set to the head weights W (so B = W, δ = e·Bᵀ = e·Wᵀ — exactly
+BP's cotangent at the last hidden output), the last segment's alignment
+is identically 1.  Random feedback at init instead gives |cos| of order
+1/√n_params.  Both are regression-tested.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+from repro import algos
+from repro.algos.dfa import tree_cosine
+from repro.hardware import calibrate as hw_calibrate
+from repro.hardware import drift as hw_drift
+from repro.utils import prng
+
+
+def _leaves32(tree):
+    return [x.astype(jnp.float32) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _norm(leaves):
+    if not leaves:
+        return jnp.float32(0.0)
+    return jnp.sqrt(sum(jnp.vdot(x, x) for x in leaves).real)
+
+
+def _resolve_lr(optimizer, opt_state):
+    """Best-effort learning rate for the update/param ratio: a float
+    ``lr`` attribute, a callable schedule evaluated at the optimizer
+    step, else 1.0 (the ratio degrades to grad/param norm)."""
+    lr = getattr(optimizer, "lr", None)
+    if lr is None:
+        return jnp.float32(1.0)
+    if callable(lr):
+        step = None
+        if isinstance(opt_state, dict):
+            step = opt_state.get("step")
+        return jnp.float32(lr(step + 1)) if step is not None else jnp.float32(1.0)
+    return jnp.float32(lr)
+
+
+class AlignmentProbe:
+    """Jit-once alignment probe bound to one Trainer.
+
+    ``probe(state, batch)`` returns a flat dict of device scalars; the
+    caller drains them (``Observer.log_step``).  The DFA side reuses the
+    trainer's own value_and_grad (microbatch accumulation included) so
+    the probed update is exactly the one training applies; the BP side
+    is ``algos.get("bp")`` on the same model/batch.
+    """
+
+    def __init__(self, trainer, *, attribution_rows: int = 64):
+        self._trainer = trainer
+        cfg = trainer.cfg
+        model = trainer.model
+        self._bp_vg = algos.get("bp").value_and_grad(model, cfg.dfa)
+        self._attribution = bool(
+            getattr(trainer, "_hw_stateful", False)
+            and cfg.dfa.photonics.mrr is not None)
+        self._attribution_rows = int(attribution_rows)
+        # jitted WITHOUT donation: the fit loop still owns `state`
+        self._fn = jax.jit(self._probe_fn)
+
+    # ---- the traced body ----
+    def _probe_fn(self, state, batch):
+        trainer = self._trainer
+        cfg = trainer.cfg
+        rng = prng.step_key(cfg.seed, state["step"], "noise")
+        hw = state.get("hw")
+        if hw is not None:
+            # replay the train step's hardware advance so the probed DFA
+            # gradient sees the same drift/calibration residual the real
+            # update will — pure recomputation, the carried state is
+            # untouched
+            hw = hw_calibrate.advance(
+                hw, cfg.dfa.photonics, state["step"],
+                prng.step_key(cfg.seed, state["step"], "hardware"),
+                recalibrate_every=cfg.recalibrate_every)
+            hw_ctx = hw_drift.use_state(hw)
+        else:
+            hw_ctx = contextlib.nullcontext()
+        with hw_ctx:
+            (_, _), dfa_grads = trainer._grads(
+                state["params"], state["fb"], batch, rng)
+        # exact gradient of the same batch (BP's batch-mean IS the
+        # microbatch average, so no accumulation needed on this side);
+        # rng reuse is deliberate — BP must see the same step conditions
+        # as the DFA pass it is compared against
+        (_, _), bp_grads = self._bp_vg(state["params"], state["fb"], batch, rng)  # lint: disable=RL001
+
+        out = {}
+        lr = _resolve_lr(cfg.optimizer, state.get("opt"))
+        all_dfa, all_bp = [], []
+        for name in sorted(dfa_grads):
+            if name not in bp_grads:
+                continue
+            d = _leaves32(dfa_grads[name])
+            b = _leaves32(bp_grads[name])
+            if not d or not b:
+                continue  # parameter-free subtree (e.g. the MLP's embed)
+            all_dfa += d
+            all_bp += b
+            gn_d, gn_b = _norm(d), _norm(b)
+            out[f"align_{name}"] = tree_cosine(dfa_grads[name], bp_grads[name])
+            out[f"gnorm_dfa_{name}"] = gn_d
+            out[f"gnorm_bp_{name}"] = gn_b
+            pn = _norm(_leaves32(state["params"][name]))
+            out[f"upd_ratio_{name}"] = lr * gn_d / jnp.maximum(pn, 1e-12)
+        num = sum(jnp.vdot(x, y) for x, y in zip(all_dfa, all_bp)).real
+        out["align_global"] = num / jnp.maximum(
+            _norm(all_dfa) * _norm(all_bp), 1e-12)
+
+        if self._attribution:
+            out.update(self._noise_budget(state, batch, hw))
+        return out
+
+    def _noise_budget(self, state, batch, hw):
+        """One sampled feedback panel product through the sole-source
+        decomposition of ``repro.obs.attribution`` — the probe's own key
+        stream ("probe-nb"), never the training one."""
+        from repro.algos import dfa as dfa_lib
+        from repro.obs import attribution
+
+        trainer = self._trainer
+        cfg = trainer.cfg
+        fwd = dfa_lib.forward_with_error(
+            trainer.model, state["params"], cfg.dfa, batch)
+        e = fwd["e_tap"].reshape(-1, fwd["e_tap"].shape[-1])
+        e = e[: self._attribution_rows].astype(jnp.float32)
+        last = trainer.model.segment_specs()[-1].name
+        bmat = state["fb"][last][0].astype(jnp.float32)
+        residual = hw_drift.residual(hw) if hw is not None else None
+        key = prng.step_key(cfg.seed, state["step"], "probe-nb")
+        return attribution.noise_budget(
+            e, bmat, cfg.dfa.photonics, key, residual=residual)
+
+    # ---- public entry ----
+    def probe(self, state, batch) -> dict:
+        """-> flat dict of device scalars for one (state, batch)."""
+        return self._fn(state, batch)
+
+    __call__ = probe

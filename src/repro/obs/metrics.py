@@ -113,17 +113,44 @@ class MemorySink:
 
 class JsonlSink:
     """Append-only JSONL file, one row per line (crash-safe: every row is
-    flushed, so a killed run keeps everything logged so far)."""
+    flushed, so a killed run keeps everything logged so far, and a
+    partial trailing line from a hard kill is truncated away on the next
+    append-open — the file is parseable JSONL at every point in its
+    life)."""
 
     def __init__(self, path: str):
         self.path = path
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
+        self._truncate_partial_tail(path)
         self._f = open(path, "a")
+
+    @staticmethod
+    def _truncate_partial_tail(path: str) -> None:
+        """Drop an unterminated final line left by a run killed mid-write
+        (every complete row ends in a newline, so anything after the last
+        one is a torn write)."""
+        try:
+            size = os.path.getsize(path)
+        except OSError:
+            return
+        if size == 0:
+            return
+        with open(path, "rb+") as f:
+            f.seek(-1, os.SEEK_END)
+            if f.read(1) == b"\n":
+                return
+            f.seek(0)
+            data = f.read()
+            f.truncate(data.rfind(b"\n") + 1)
 
     def write(self, row: dict) -> None:
         self._f.write(json.dumps(row) + "\n")
         self._f.flush()
+
+    def flush(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
 
     def close(self) -> None:
         if not self._f.closed:
@@ -200,6 +227,14 @@ class Registry:
             for stat, v in h.summary().items():
                 out[f"{h.name}_{stat}"] = v
         return out
+
+    def flush(self) -> None:
+        """Best-effort flush of every sink that buffers (JSONL files) —
+        the exception-path half of the crash-safe logging contract."""
+        for sink in self.sinks:
+            flush = getattr(sink, "flush", None)
+            if flush is not None:
+                flush()
 
     def close(self) -> None:
         for sink in self.sinks:

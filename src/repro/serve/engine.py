@@ -385,10 +385,14 @@ class Engine:
         for r in requests:
             self.submit(r)
         ticks = 0
-        while (self._pending or any(r is not None for r in self._requests)) and ticks < max_ticks:
-            if not self.tick():
-                break
-            ticks += 1
+        try:
+            while (self._pending or any(r is not None for r in self._requests)) and ticks < max_ticks:
+                if not self.tick():
+                    break
+                ticks += 1
+        finally:
+            # interrupted or not, buffered observer JSONL reaches disk
+            self.observer.flush()
         return requests, ticks
 
     def run_arrivals(self, requests: list[Request], arrivals, max_ticks: int = 1_000_000):
@@ -397,15 +401,18 @@ class Engine:
         order = sorted(range(len(requests)), key=lambda i: arrivals[i])
         t0 = time.monotonic()
         idx, ticks = 0, 0
-        while ticks < max_ticks:
-            now = time.monotonic() - t0
-            while idx < len(order) and arrivals[order[idx]] <= now:
-                self.submit(requests[order[idx]])
-                idx += 1
-            if self.tick():
-                ticks += 1
-            elif idx < len(order):
-                time.sleep(min(1e-3, max(0.0, arrivals[order[idx]] - (time.monotonic() - t0))))
-            else:
-                break
+        try:
+            while ticks < max_ticks:
+                now = time.monotonic() - t0
+                while idx < len(order) and arrivals[order[idx]] <= now:
+                    self.submit(requests[order[idx]])
+                    idx += 1
+                if self.tick():
+                    ticks += 1
+                elif idx < len(order):
+                    time.sleep(min(1e-3, max(0.0, arrivals[order[idx]] - (time.monotonic() - t0))))
+                else:
+                    break
+        finally:
+            self.observer.flush()
         return requests, ticks

@@ -81,6 +81,12 @@ class TrainerConfig:
     # multi-host deployments a step exceeding the deadline raises through
     # the supervisor which restarts the slow host from the last snapshot.
     step_deadline_s: float | None = None
+    # in-situ diagnostics cadence (obs.introspect.AlignmentProbe): every
+    # this many steps fit() computes the true BP gradient on the step's
+    # own batch and logs DFA-vs-BP alignment (plus the emu noise budget)
+    # through the observer.  None/0 = off — the probe never consumes
+    # training PRNG keys, so probed and unprobed runs are bit-identical.
+    probe_every: int | None = None
     # opt-in runtime sanitizers (repro.lint.runtime): checkify the jitted
     # train step (NaN/Inf, div-by-zero, OOB indexing + the emu channel's
     # check_finite assertions) and fail on any retrace after warmup.
@@ -134,6 +140,7 @@ class Trainer:
         self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.keep_ckpts) if cfg.ckpt_dir else None
         self._log_file = None
         self._log_keys = None
+        self._probe = None  # lazily-built AlignmentProbe (jit cache survives fits)
 
     def _mesh_ctx(self):
         if self.mesh is None:
@@ -207,11 +214,15 @@ class Trainer:
                      "step": state["step"] + 1}
         if hw is not None:
             new_state["hw"] = hw
-            resid = hw_drift.residual(hw)
-            metrics["hw_drift_rms"] = jnp.sqrt(jnp.mean(jnp.square(hw["drift"])))
-            metrics["hw_residual_rms"] = jnp.sqrt(jnp.mean(jnp.square(resid)))
             device = self.cfg.dfa.photonics.mrr
-            if device is not None and device.drift_sigma > 0:
+            # hw gauges only when the device actually drifts: a drift-free
+            # bank (emu_ideal, or an abstract-noise emu config) carries hw
+            # state that is identically zero, and emitting all-zero
+            # hw_residual_rms rows would just feed hwmon vacuous data
+            if device is not None and device.stateful:
+                resid = hw_drift.residual(hw)
+                metrics["hw_drift_rms"] = jnp.sqrt(jnp.mean(jnp.square(hw["drift"])))
+                metrics["hw_residual_rms"] = jnp.sqrt(jnp.mean(jnp.square(resid)))
                 # rings whose uncompensated detuning left the usable range —
                 # the hwmon dead-ring gauge, computed on device so the host
                 # never touches the full (n_buses, rows, cols) grid
@@ -309,8 +320,27 @@ class Trainer:
         ``observer.log_step`` (one batched ``jax.device_get``, hwmon
         gauges + drift-budget alerts included).  ``None`` resolves to the
         shared null observer — a constant-cost no-op path.
+
+        With ``cfg.probe_every`` set, every probe_every-th step first
+        runs the ``obs.introspect.AlignmentProbe`` on the step's own
+        (state, batch): DFA-vs-BP alignment, grad norms, and (on
+        stateful hardware) the ``obs.attribution`` noise budget land as
+        an extra observer row at that step.  The probe re-derives its
+        keys from (seed, step) and never donates, so training states are
+        bit-identical with the probe on or off.
         """
         observer = obs_lib.resolve(observer)
+        probe = None
+        if self.cfg.probe_every:
+            if self._probe is None:
+                from repro.obs.introspect import AlignmentProbe
+
+                self._probe = AlignmentProbe(self)
+            probe = self._probe
+            if not observer.enabled:
+                # probe rows need somewhere to land: an in-memory observer
+                # (MemorySink ring) keeps the no-observer call signature
+                observer = obs_lib.Observer()
         state, start = self.restore_or_init()
         if self.mesh is not None:
             state = sharding.replicate(self.mesh, state)
@@ -319,44 +349,60 @@ class Trainer:
         recal = self.cfg.recalibrate_every if self._hw_stateful else 0
         if timer is not None:
             timer.start()
-        for step in range(start, total_steps):
-            batch = feed(step)
-            if timer is not None and timer.examples_per_step is None:
-                leaves = jax.tree_util.tree_leaves(batch)
-                if leaves and getattr(leaves[0], "ndim", 0) >= 1:
-                    timer.examples_per_step = int(leaves[0].shape[0])
-            if observer.enabled:
-                # the span covers dispatch (async under jit — device time
-                # shows up in the logging-interval drain span instead)
-                with observer.span("step", step=step,
-                                   microbatches=self.cfg.microbatches):
+        try:
+            for step in range(start, total_steps):
+                batch = feed(step)
+                if timer is not None and timer.examples_per_step is None:
+                    leaves = jax.tree_util.tree_leaves(batch)
+                    if leaves and getattr(leaves[0], "ndim", 0) >= 1:
+                        timer.examples_per_step = int(leaves[0].shape[0])
+                if probe is not None and step % self.cfg.probe_every == 0:
+                    # diagnostics BEFORE the update: alignment of the DFA
+                    # update this step is about to apply, on its own batch
+                    with observer.span("probe", step=step):
+                        with self._mesh_ctx():
+                            probed = probe(state, batch)
+                        probe_host = observer.log_step(step, probed)
+                    if verbose:
+                        print(f"[probe {step}] align_global="
+                              f"{probe_host.get('align_global', float('nan')):.4f}",
+                              flush=True)
+                if observer.enabled:
+                    # the span covers dispatch (async under jit — device time
+                    # shows up in the logging-interval drain span instead)
+                    with observer.span("step", step=step,
+                                       microbatches=self.cfg.microbatches):
+                        state, metrics = self._dispatch(state, batch,
+                                                        self._fit_step_fn)
+                    if recal > 0 and step > 0 and step % recal == 0:
+                        # mirrors hw_calibrate.advance's cadence inside the step
+                        observer.event("recalibration", cat="hwmon", step=step)
+                else:
                     state, metrics = self._dispatch(state, batch,
                                                     self._fit_step_fn)
-                if recal > 0 and step > 0 and step % recal == 0:
-                    # mirrors hw_calibrate.advance's cadence inside the step
-                    observer.event("recalibration", cat="hwmon", step=step)
-            else:
-                state, metrics = self._dispatch(state, batch,
-                                                self._fit_step_fn)
-            if timer is not None:
-                timer.tick(state["step"])
-            if (step + 1) % self.cfg.log_every == 0 or step + 1 == total_steps:
-                if observer.enabled:
-                    with observer.span("drain", step=step + 1):
-                        host = observer.log_step(step + 1, metrics)
-                else:
-                    # one batched transfer for the whole dict — never one
-                    # blocking float() per metric; the floats below read
-                    # host memory, not the device
-                    host = {k: float(v) for k, v in  # lint: disable=RL002
-                            jax.device_get(dict(metrics)).items()}  # lint: disable=RL002
-                self._log(step + 1, host)
-                if verbose:
-                    txt = " ".join(f"{k}={v:.4f}"
-                                   for k, v in sorted(host.items()))
-                    print(f"[step {step + 1}/{total_steps}] {txt}", flush=True)
-            if self.ckpt is not None and (step + 1) % self.cfg.ckpt_every == 0:
-                self.ckpt.save(step + 1, state)
+                if timer is not None:
+                    timer.tick(state["step"])
+                if (step + 1) % self.cfg.log_every == 0 or step + 1 == total_steps:
+                    if observer.enabled:
+                        with observer.span("drain", step=step + 1):
+                            host = observer.log_step(step + 1, metrics)
+                    else:
+                        # one batched transfer for the whole dict — never one
+                        # blocking float() per metric; the floats below read
+                        # host memory, not the device
+                        host = {k: float(v) for k, v in  # lint: disable=RL002
+                                jax.device_get(dict(metrics)).items()}  # lint: disable=RL002
+                    self._log(step + 1, host)
+                    if verbose:
+                        txt = " ".join(f"{k}={v:.4f}"
+                                       for k, v in sorted(host.items()))
+                        print(f"[step {step + 1}/{total_steps}] {txt}", flush=True)
+                if self.ckpt is not None and (step + 1) % self.cfg.ckpt_every == 0:
+                    self.ckpt.save(step + 1, state)
+        finally:
+            # interrupted or not, buffered JSONL rows reach disk — an
+            # aborted run leaves a parseable metrics file
+            observer.flush()
         if self.ckpt is not None:
             self.ckpt.save(total_steps, state)
         if eval_fn is not None:

@@ -1,0 +1,358 @@
+"""Diagnostics plane: alignment probe analytic anchors, noise-budget
+attribution closure, anomaly detection, and the crash-safe JSONL / hwmon
+guard satellites."""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api, obs
+from repro.core import photonics
+from repro.hardware import channel, drift, mrr
+from repro.obs import summarize
+from repro.obs.anomaly import AnomalyDetector
+from repro.obs.attribution import noise_budget
+from repro.obs.introspect import AlignmentProbe
+from repro.obs.metrics import JsonlSink
+from repro.utils import prng
+
+
+def _batch(model, n=32, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    return {"x": jax.random.normal(kx, (n, model.in_dim)),
+            "y": jax.random.randint(ky, (n,), 0, model.n_classes)}
+
+
+def _session(**kw):
+    kw.setdefault("arch", "mnist_mlp")
+    kw.setdefault("smoke", True)
+    kw.setdefault("algo", "dfa")
+    kw.setdefault("log_every", 10**9)
+    return api.build_session(**kw)
+
+
+# ---------------------------------------------------------------------------
+# alignment probe: analytic anchors
+# ---------------------------------------------------------------------------
+
+def test_probe_emits_per_layer_and_global_alignment():
+    s = _session(hardware="ideal", backend="ref")
+    state = s.trainer.init_state()
+    m = jax.device_get(AlignmentProbe(s.trainer).probe(state, _batch(s.model)))
+    segs = [spec.name for spec in s.model.segment_specs()]
+    for name in segs + ["head"]:
+        assert f"align_{name}" in m
+        assert f"gnorm_dfa_{name}" in m and f"gnorm_bp_{name}" in m
+        assert f"upd_ratio_{name}" in m and m[f"upd_ratio_{name}"] >= 0
+    assert "align_global" in m
+    # DFA's head gradient IS the exact BP gradient (Eq. 1 trains the head
+    # directly on the true error) — alignment exactly 1 by construction
+    assert m["align_head"] == pytest.approx(1.0, abs=1e-5)
+    # the MLP's parameter-free embed segment must not produce a 0/0 row
+    assert "align_embed" not in m
+
+
+def test_feedback_equal_to_head_weights_gives_unit_alignment():
+    # B = W makes the DFA delta e·Wᵀ — exactly BP's cotangent at the last
+    # hidden layer — so with ideal photonics the last segment's gradient
+    # equals BP's and its alignment is identically 1 (ISSUE anchor).
+    s = _session(hardware="ideal", backend="ref")
+    state = s.trainer.init_state()
+    last = s.model.segment_specs()[-1].name
+    state["fb"] = dict(state["fb"],
+                       **{last: state["params"]["head"]["w"][None]})
+    m = jax.device_get(AlignmentProbe(s.trainer).probe(state, _batch(s.model)))
+    assert m[f"align_{last}"] == pytest.approx(1.0, abs=1e-5)
+
+
+def test_random_feedback_alignment_is_small_at_init():
+    # a fresh random bank is an arbitrary direction in a ~10^3-dim space:
+    # |cos| concentrates at O(1/sqrt(n)), far from the trained regime
+    s = _session(hardware="ideal", backend="ref")
+    state = s.trainer.init_state()
+    m = jax.device_get(AlignmentProbe(s.trainer).probe(state, _batch(s.model)))
+    for name in (spec.name for spec in s.model.segment_specs()):
+        assert abs(m[f"align_{name}"]) < 0.5
+
+
+@pytest.mark.slow
+def test_alignment_increases_over_short_fit():
+    # the paper's central training claim: feedback alignment grows as the
+    # network adapts its forward weights to the fixed feedback bank
+    from repro.data import mnist
+
+    s = _session(hardware="ideal", backend="ref", probe_every=150,
+                 prefetch=0)
+    data = mnist.load(seed=0)
+    xtr, ytr = data["train"]
+    xtr = xtr[:, : s.model.in_dim]
+    from repro.data import pipeline
+
+    pipe = pipeline.ArrayClassification(xtr, ytr, 64, 0)
+    ob = obs.Observer()
+    s.fit(pipe.batch, total_steps=301, verbose=False, observer=ob)
+    rows = [r for r in ob.metrics.sinks[0].rows
+            if "align_global" in r["metrics"]]
+    assert len(rows) >= 3
+    first = rows[0]["metrics"]["align_global"]
+    last = rows[-1]["metrics"]["align_global"]
+    assert last > first + 0.05, (first, last)
+
+
+def test_probe_on_and_off_training_states_are_bitwise_identical():
+    # the probe re-derives its keys from (seed, step) and never donates:
+    # training must not see it (utils.prng.consume discipline, RL001)
+    batch = _batch(api.build_model("mnist_mlp", smoke=True))
+
+    def final_state(probe_every):
+        s = _session(hardware="emu_offchip", backend="emu",
+                     recalibrate_every=3, probe_every=probe_every)
+        state, _ = s.fit(lambda i: batch, total_steps=6, verbose=False)
+        return jax.device_get(state)
+
+    plain, probed = final_state(None), final_state(2)
+    for a, b in zip(jax.tree_util.tree_leaves(plain),
+                    jax.tree_util.tree_leaves(probed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fit_probe_rows_land_in_observer_at_cadence():
+    s = _session(hardware="emu_onchip", backend="emu", probe_every=2,
+                 recalibrate_every=4)
+    ob = obs.Observer()
+    batch = _batch(s.model, n=16)
+    s.fit(lambda i: batch, total_steps=5, verbose=False, observer=ob)
+    probe_rows = [r for r in ob.metrics.sinks[0].rows
+                  if "align_global" in r["metrics"]]
+    assert [r["step"] for r in probe_rows] == [0, 2, 4]
+    # emu sessions fold the noise budget into the same probe row
+    m = probe_rows[-1]["metrics"]
+    assert "nb_total_var" in m and "nb_closure" in m
+
+
+def test_probe_every_without_observer_gets_inmemory_observer():
+    # probe rows need a sink even when the caller passed no observer; the
+    # fit must still run and return finite metrics
+    s = _session(hardware="ideal", backend="ref", probe_every=2)
+    batch = _batch(s.model, n=8)
+    state, metrics = s.fit(lambda i: batch, total_steps=3, verbose=False)
+    assert np.isfinite(float(jax.device_get(metrics["loss"])))
+
+
+# ---------------------------------------------------------------------------
+# noise-budget attribution
+# ---------------------------------------------------------------------------
+
+def _onchip_cfg():
+    cfg = photonics.PRESETS["emu_onchip"]
+    assert cfg.mrr is not None
+    return cfg
+
+
+def test_noise_budget_closure_within_tolerance_on_emu_onchip():
+    cfg = _onchip_cfg()
+    key = jax.random.PRNGKey(3)
+    ka, kb, kd, kn = jax.random.split(key, 4)
+    e = 0.3 * jax.random.normal(ka, (64, 10))
+    b = jax.random.normal(kb, (32, 10)) / np.sqrt(10)
+    hw = drift.init_state(cfg, kd)
+    hw = dict(hw, drift=0.02 * jax.random.normal(kd, hw["drift"].shape))
+    m = jax.device_get(noise_budget(e, b, cfg, kn,
+                                    residual=drift.residual(hw)))
+    # components sum to the observed error power within 10% (ISSUE
+    # acceptance) — the closure gauge is the noise-model consistency test
+    assert m["nb_closure"] == pytest.approx(1.0, abs=0.1)
+    # sampled thermal error matches photonics.noise_sigma_total's
+    # analytic accounting (channel.py vs core/photonics.py cross-check)
+    assert m["nb_thermal_vs_analytic"] == pytest.approx(1.0, abs=0.15)
+    # on-chip BPD noise dominates this regime
+    assert m["nb_thermal_var"] > m["nb_adc_var"] > 0
+    assert m["nb_total_var"] > 0
+
+
+def test_noise_budget_all_sources_emitted_and_drift_attributed():
+    cfg = _onchip_cfg()
+    key = jax.random.PRNGKey(5)
+    e = 0.3 * jax.random.normal(key, (32, 10))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (16, 10)) / 3.0
+    resid = 0.05 * jax.random.normal(jax.random.fold_in(key, 2),
+                                     (1, cfg.bank_rows, cfg.bank_cols))
+    m = jax.device_get(noise_budget(e, b, cfg, jax.random.fold_in(key, 3),
+                                    residual=resid))
+    for src in channel.NOISE_SOURCES:
+        assert f"nb_{src}_var" in m
+    assert m["nb_drift_var"] > 0
+    # sources the device doesn't have measure exactly zero
+    assert m["nb_shot_var"] == 0.0
+    assert m["nb_dead_rings_var"] == 0.0
+
+
+def test_ideal_twin_preserves_geometry_and_kills_noise():
+    cfg = _onchip_cfg()
+    twin = channel.ideal_twin(cfg)
+    assert (twin.bank_rows, twin.bank_cols, twin.n_buses) == (
+        cfg.bank_rows, cfg.bank_cols, cfg.n_buses)
+    assert twin.noise_std == 0.0 and twin.input_bits is None
+    assert twin.mrr.adc_bits is None and not twin.mrr.stateful
+    # the twin's product is the plain matmul to f32 tolerance
+    e = 0.3 * jax.random.normal(jax.random.PRNGKey(0), (8, 10))
+    b = jax.random.normal(jax.random.PRNGKey(1), (6, 10)) / 3.0
+    out = channel.emulated_matmul(e, b, twin, kernel="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(e @ b.T),
+                               rtol=0, atol=1e-4)
+
+
+def test_isolate_source_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown noise source"):
+        channel.isolate_source(_onchip_cfg(), "gremlins")
+
+
+def test_isolate_source_turns_on_exactly_one_source():
+    cfg = _onchip_cfg()
+    thermal = channel.isolate_source(cfg, "thermal")
+    assert thermal.noise_std == cfg.noise_std
+    assert thermal.mrr.adc_bits is None
+    adc = channel.isolate_source(cfg, "adc")
+    assert adc.noise_std == 0.0
+    assert adc.mrr.adc_bits == cfg.mrr.adc_bits
+
+
+# ---------------------------------------------------------------------------
+# anomaly detection
+# ---------------------------------------------------------------------------
+
+def test_anomaly_detector_is_edge_triggered_and_rearms():
+    det = AnomalyDetector(watch=("loss",), warmup=4, k=6.0)
+    for i in range(10):
+        assert det.observe(i, {"loss": 1.0 + 0.01 * (i % 2)}) == []
+    # a spike fires exactly once while it persists...
+    assert len(det.observe(10, {"loss": 50.0})) == 1
+    assert det.observe(11, {"loss": 50.0}) == []
+    # ...and after enough in-band rows the detector re-arms.  (stats keep
+    # updating out-of-band, so the center converges to the new level)
+    fired = []
+    for i in range(12, 40):
+        fired += det.observe(i, {"loss": 1.0})
+    fired += det.observe(40, {"loss": 50.0})
+    assert len(det.alerts) >= 2
+
+
+def test_anomaly_detector_nonfinite_always_alerts():
+    det = AnomalyDetector(watch=("loss",), warmup=4)
+    det.observe(0, {"loss": 1.0})
+    alerts = det.observe(1, {"loss": float("nan")})
+    assert len(alerts) == 1 and "non-finite" in alerts[0].message
+
+
+def test_anomaly_detector_skips_unwatched_and_missing_keys():
+    det = AnomalyDetector(watch=("loss",), warmup=0)
+    assert det.observe(0, {"accuracy": 0.5}) == []
+    assert det.observe(1, {}) == []
+
+
+def test_observer_surfaces_anomaly_as_instant_counter_and_flag():
+    ob = obs.Observer(anomaly=AnomalyDetector(watch=("loss",), warmup=2,
+                                              k=6.0))
+    for i in range(8):
+        ob.log_step(i, {"loss": 1.0})
+    host = ob.log_step(8, {"loss": 99.0})
+    assert host.get("anomaly_loss") == 1.0
+    assert ob.metrics.snapshot()["anomaly_alerts"] == 1.0
+    names = [e["name"] for e in ob.trace.events if e["ph"] == "i"]
+    assert "WARN:anomaly:loss" in names
+    assert any(isinstance(a, obs.AnomalyAlert) for a in ob.alerts)
+
+
+# ---------------------------------------------------------------------------
+# satellites: hwmon guards + crash-safe JSONL
+# ---------------------------------------------------------------------------
+
+def test_ref_backend_fit_with_observer_logs_no_hw_keys():
+    s = _session(hardware="onchip_bpd", backend="ref", log_every=2)
+    ob = s.observe()
+    assert ob.hwmon is None
+    batch = _batch(s.model, n=8)
+    s.fit(lambda i: batch, total_steps=4, verbose=False, observer=ob)
+    keys = {k for r in ob.metrics.sinks[0].rows for k in r["metrics"]}
+    assert not any(k.startswith("hw_") for k in keys), sorted(keys)
+
+
+def test_emu_ideal_fit_with_observer_logs_no_hw_keys():
+    # drift-free device: hw state exists but is identically zero — the
+    # trainer must not emit vacuous hw gauges, nor for_session a monitor
+    s = _session(hardware="emu_ideal", backend="emu", log_every=2)
+    ob = s.observe()
+    assert ob.hwmon is None
+    batch = _batch(s.model, n=8)
+    s.fit(lambda i: batch, total_steps=4, verbose=False, observer=ob)
+    keys = {k for r in ob.metrics.sinks[0].rows for k in r["metrics"]}
+    assert not any(k.startswith("hw_") for k in keys), sorted(keys)
+
+
+def test_jsonl_sink_truncates_torn_tail_on_reopen(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"t": 1.0, "step": 1, "metrics": {"a": 1.0}})
+                + "\n")
+        f.write('{"t": 2.0, "step"')  # torn mid-write by a kill
+    sink = JsonlSink(path)
+    sink.write({"t": 3.0, "step": 2, "metrics": {"a": 2.0}})
+    sink.close()
+    rows = summarize.read_rows(path)
+    assert [r["step"] for r in rows] == [1, 2]
+
+
+def test_jsonl_sink_reopen_noops_on_clean_and_empty_files(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    JsonlSink(path).close()  # missing -> created empty
+    sink = JsonlSink(path)   # empty -> untouched
+    sink.write({"t": 1.0, "step": 1, "metrics": {}})
+    sink.close()
+    assert len(summarize.read_rows(path)) == 1
+    JsonlSink(path).close()  # clean newline-terminated file -> untouched
+    assert len(summarize.read_rows(path)) == 1
+
+
+def test_interrupted_fit_leaves_parseable_jsonl(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    s = _session(hardware="emu_offchip", backend="emu", log_every=1,
+                 prefetch=0)
+    ob = s.observe(metrics_path=path)
+    batch = _batch(s.model, n=8)
+
+    def data_fn(step):
+        if step == 3:
+            raise RuntimeError("boom")
+        return batch
+
+    with pytest.raises(RuntimeError, match="boom"):
+        s.fit(data_fn, total_steps=10, verbose=False, observer=ob)
+    rows = summarize.read_rows(path)  # parses cleanly or the test fails
+    assert [r["step"] for r in rows] == [1, 2, 3]
+    assert all("loss" in r["metrics"] for r in rows)
+
+
+def test_read_rows_rejects_mid_file_corruption(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write('{"t": 1.0, "step": 1, "metrics": {}}\n')
+        f.write("{torn\n")
+        f.write('{"t": 2.0, "step": 2, "metrics": {}}\n')
+    with pytest.raises(ValueError, match="corrupt JSONL"):
+        summarize.read_rows(path)
+
+
+# ---------------------------------------------------------------------------
+# PRNG discipline: the probe's key streams never collide with training's
+# ---------------------------------------------------------------------------
+
+def test_probe_key_stream_is_disjoint_from_training_streams():
+    step = 7
+    train_keys = {tuple(np.asarray(prng.step_key(0, step, name)))
+                  for name in ("noise", "hardware", "data")}
+    probe_key = tuple(np.asarray(prng.step_key(0, step, "probe-nb")))
+    assert probe_key not in train_keys
